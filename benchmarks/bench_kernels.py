@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: allclose vs oracle + wall time.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code — the numbers prove correctness and
+give a relative reference, not TPU performance)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_reference, ssd_reference
+from repro.kernels.ssd import ssd_chunked_kernel
+
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    # flash attention
+    b, hq, hkv, s, d = 1, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_reference(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    t0 = time.perf_counter()
+    attention_reference(q, k, v, causal=True).block_until_ready()
+    t_ref = time.perf_counter() - t0
+    rows.append(("kernels.flash_attention.max_err", f"{err:.2e}",
+                 f"jnp_ref {t_ref * 1e3:.1f} ms @ {b}x{hq}x{s}x{d}"))
+
+    # ssd
+    bs, ss, h, p, g, n = 1, 256, 4, 64, 1, 64
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (bs, ss, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, ss, h)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (bs, ss, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (bs, ss, g, n)) * 0.5
+    D = jnp.ones((h,))
+    y, st = ssd_chunked_kernel(x, dt, A, B, C, D, chunk=64, interpret=True)
+    y_ref, st_ref = ssd_reference(x, dt, A, B, C, D)
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    rows.append(("kernels.ssd.max_err", f"{err:.2e}",
+                 f"state_err {float(jnp.max(jnp.abs(st - st_ref))):.2e}"))
+    return emit(rows, "Pallas kernels (interpret mode) vs oracles")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Roofline table (deliverable g): reads the dry-run JSONL artifacts and
+prints the three-term roofline per (arch x shape x mesh)."""
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DATA = Path(__file__).parent / "data"
+
+
+def load_reports():
+    recs = []
+    for f in sorted(DATA.glob("dryrun_*.jsonl")):
+        for line in f.read_text().splitlines():
+            if line.strip():
+                recs.append(json.loads(line))
+    return recs
+
+
+def run():
+    recs = load_reports()
+    if not recs:
+        return emit([("roofline.status", "no dryrun data",
+                      "run python -m repro.launch.dryrun --all first")])
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        key = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        terms = (f"c={rl['compute_s']:.4f}/m={rl['memory_s']:.4f}"
+                 f"/n={rl['collective_s']:.4f}")
+        rows.append((f"roofline.{key}", rl["bottleneck"], terms))
+    rows.append(("roofline.count", len(recs), "arch x shape x mesh combos"))
+    return emit(rows, "Roofline terms from dry-run artifacts")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Beyond-paper results:
+
+1. Hot Updates (§2.2) — partial startups through the BootSeer runtime.
+2. RDMA-shared environment cache (the paper's §7 future work) — env cache
+   served from a peer memory pool with copy-on-write mapping, simulated at
+   cluster scale on top of the calibrated workload model.
+"""
+
+import statistics
+
+from repro.core.stages import Stage
+from repro.simcluster.workload import StartupWorkload
+
+from benchmarks.common import emit
+
+
+def run(seed: int = 1):
+    rows = []
+    for gpus in (64, 128, 1024):
+        servers = max(1, gpus // 8)
+        boot = StartupWorkload(bootseer=True, seed=seed).run(servers)
+        rdma = StartupWorkload(bootseer=True, rdma_env_cache=True,
+                               seed=seed).run(servers)
+        be = statistics.median(
+            boot["stages"][Stage.ENV_SETUP.value].values())
+        re_ = statistics.median(
+            rdma["stages"][Stage.ENV_SETUP.value].values())
+        rows.append((f"beyond.rdma_env_med_s.{gpus}gpus",
+                     f"{be:.1f}->{re_:.1f}", f"x{be / re_:.2f}"))
+        rows.append((f"beyond.rdma_e2e_s.{gpus}gpus",
+                     f"{boot['job_level']:.1f}->{rdma['job_level']:.1f}",
+                     f"x{boot['job_level'] / rdma['job_level']:.2f}"))
+    return emit(rows, "Beyond-paper: RDMA env cache (§7 future work)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import statistics
+import time
+from contextlib import contextmanager
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall-clock seconds over repeats."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def emit(rows: list[tuple], header: str = ""):
+    """Print ``name,value,derived`` CSV rows (the run.py contract)."""
+    if header:
+        print(f"# {header}")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+    return rows

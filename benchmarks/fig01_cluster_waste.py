@@ -1,0 +1,25 @@
+"""Fig. 1 — breakdown of consumed GPU-server-hours into training vs startup
+overhead, cluster-wide (paper: >3.5% of GPU time lost to startup)."""
+
+from repro.simcluster.trace import generate_cluster_trace, \
+    gpu_time_waste_fraction
+
+from benchmarks.common import emit
+
+
+def run(n_jobs: int = 300, seed: int = 0):
+    trace = generate_cluster_trace(n_jobs, seed=seed)
+    w = gpu_time_waste_fraction(trace)
+    rows = [
+        ("fig01.startup_gpu_server_hours", round(w["startup_hours"], 1),
+         "orange bars"),
+        ("fig01.train_gpu_server_hours", round(w["train_hours"], 1),
+         "blue bars"),
+        ("fig01.startup_fraction", round(w["startup_fraction"], 4),
+         "paper: >0.035"),
+    ]
+    return emit(rows, "Fig.1 cluster GPU-hour waste (simulated trace)")
+
+
+if __name__ == "__main__":
+    run()

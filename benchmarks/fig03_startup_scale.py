@@ -1,0 +1,31 @@
+"""Fig. 3 — job-level and node-level startup overhead vs job scale
+(paper: >100-GPU jobs take ~6-7 min job-level; node-level ~1 min lower)."""
+
+import statistics
+
+from repro.simcluster.trace import generate_cluster_trace
+
+from benchmarks.common import emit
+
+BUCKETS = [(1, 8), (9, 32), (33, 100), (101, 512), (513, 100000)]
+
+
+def run(n_jobs: int = 300, seed: int = 0):
+    trace = generate_cluster_trace(n_jobs, seed=seed)
+    rows = []
+    for lo, hi in BUCKETS:
+        js = [r for r in trace if lo <= r.gpus <= hi]
+        if not js:
+            continue
+        job = statistics.median(r.job_level_s for r in js)
+        node = statistics.median(r.node_level_s for r in js)
+        tag = f"{lo}-{hi}gpus"
+        rows.append((f"fig03.job_level_s.{tag}", round(job, 1),
+                     f"n={len(js)}"))
+        rows.append((f"fig03.node_level_s.{tag}", round(node, 1),
+                     "excl. peer wait"))
+    return emit(rows, "Fig.3 startup overhead vs job scale")
+
+
+if __name__ == "__main__":
+    run()

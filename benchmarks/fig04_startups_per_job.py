@@ -1,0 +1,27 @@
+"""Fig. 4 — number of startup events per job vs job scale (paper: small
+jobs ~1 startup; large jobs 2-8, worst cases 20+)."""
+
+import statistics
+
+from repro.simcluster.trace import generate_cluster_trace
+
+from benchmarks.common import emit
+from benchmarks.fig03_startup_scale import BUCKETS
+
+
+def run(n_jobs: int = 400, seed: int = 0):
+    trace = generate_cluster_trace(n_jobs, seed=seed)
+    rows = []
+    for lo, hi in BUCKETS:
+        js = [r.startups for r in trace if lo <= r.gpus <= hi]
+        if not js:
+            continue
+        tag = f"{lo}-{hi}gpus"
+        rows.append((f"fig04.startups_median.{tag}",
+                     statistics.median(js), f"n_jobs={len(js)}"))
+        rows.append((f"fig04.startups_max.{tag}", max(js), "worst case"))
+    return emit(rows, "Fig.4 startups per job vs scale")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig. 5 — node-level startup overhead broken down by stage (paper:
+queue ~100 s; image 20-40 s; env 100-300 s — the biggest; init 100-200 s)."""
+
+import statistics
+
+import numpy as np
+
+from repro.core.stages import Stage
+from repro.simcluster.workload import StartupWorkload
+
+from benchmarks.common import emit
+
+
+def run(servers: int = 8, seeds=range(8)):
+    per_stage = {s.value: [] for s in
+                 (Stage.IMAGE_LOAD, Stage.ENV_SETUP, Stage.MODEL_INIT)}
+    for seed in seeds:
+        r = StartupWorkload(bootseer=False, seed=seed).run(servers)
+        for s, d in r["stages"].items():
+            per_stage[s] += list(d.values())
+    rng = np.random.default_rng(0)
+    queue = rng.lognormal(np.log(100), 1.0, 200)
+    rows = [("fig05.resource_queue_s.median",
+             round(float(np.median(queue)), 1), "paper ~100s")]
+    for s, vals in per_stage.items():
+        rows.append((f"fig05.{s}_s.median",
+                     round(statistics.median(vals), 1), ""))
+        rows.append((f"fig05.{s}_s.p95",
+                     round(float(np.percentile(vals, 95)), 1), ""))
+    return emit(rows, f"Fig.5 node-level stage breakdown ({servers} servers)")
+
+
+if __name__ == "__main__":
+    run()

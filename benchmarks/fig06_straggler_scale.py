@@ -1,0 +1,29 @@
+"""Fig. 6 — straggler Max/Median ratio grows with job scale (paper: ~1.5x
+at 1000+ GPUs, extreme cases 4x+)."""
+
+import statistics
+
+from repro.core.stages import Stage
+from repro.simcluster.workload import StartupWorkload
+
+from benchmarks.common import emit
+
+SCALES = [2, 8, 32, 128, 512]  # 8-GPU servers -> 16..4096 GPUs
+
+
+def run(seeds=range(10)):
+    rows = []
+    for servers in SCALES:
+        ratios = []
+        for seed in seeds:
+            r = StartupWorkload(bootseer=False, seed=seed).run(servers)
+            d = list(r["stages"][Stage.ENV_SETUP.value].values())
+            ratios.append(max(d) / statistics.median(d))
+        rows.append((f"fig06.max_median_ratio.{servers * 8}gpus",
+                     round(statistics.fmean(ratios), 3),
+                     f"p95={round(sorted(ratios)[-1], 2)}"))
+    return emit(rows, "Fig.6 straggler Max/Median vs scale (install proxy)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Fig. 13 — per-stage startup improvement breakdown (paper: image 4-10x,
+env ~2x, model-init ~1.6x, across 16..128 GPUs)."""
+
+from repro.core.stages import Stage
+from repro.simcluster.workload import StartupWorkload
+
+from benchmarks.common import emit
+from benchmarks.fig12_e2e_startup import GPU_SCALES
+
+
+def run(seed: int = 1):
+    rows = []
+    for gpus in GPU_SCALES:
+        servers = max(1, gpus // 8)
+        base = StartupWorkload(bootseer=False, seed=seed).run(servers)
+        opt = StartupWorkload(bootseer=True, seed=seed).run(servers)
+        for s in (Stage.IMAGE_LOAD, Stage.ENV_SETUP, Stage.MODEL_INIT):
+            b = max(base["stages"][s.value].values())
+            o = max(opt["stages"][s.value].values())
+            rows.append((f"fig13.{s.value}.{gpus}gpus",
+                         f"{b:.1f}->{o:.1f}", f"x{b / o:.2f}"))
+    return emit(rows, "Fig.13 per-stage improvement breakdown")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Fig. 14 — distribution of dependency-installation durations across all
+nodes of the 128-GPU job: BootSeer's env cache removes both the overhead
+and the variance (straggler elimination)."""
+
+import statistics
+
+from repro.core.stages import Stage
+from repro.simcluster.workload import StartupWorkload
+
+from benchmarks.common import emit
+
+
+def run(gpus: int = 128, seeds=range(8)):
+    servers = gpus // 8
+    base_all, opt_all = [], []
+    for seed in seeds:
+        b = StartupWorkload(bootseer=False, seed=seed).run(servers)
+        o = StartupWorkload(bootseer=True, seed=seed).run(servers)
+        base_all += list(b["stages"][Stage.ENV_SETUP.value].values())
+        opt_all += list(o["stages"][Stage.ENV_SETUP.value].values())
+
+    def box(vals):
+        return (round(min(vals), 1), round(statistics.median(vals), 1),
+                round(max(vals), 1))
+    bmin, bmed, bmax = box(base_all)
+    omin, omed, omax = box(opt_all)
+    rows = [
+        ("fig14.baseline.min_med_max", f"{bmin}/{bmed}/{bmax}", "seconds"),
+        ("fig14.bootseer.min_med_max", f"{omin}/{omed}/{omax}", "seconds"),
+        ("fig14.median_speedup", round(bmed / omed, 2), "paper ~2x"),
+        ("fig14.spread_reduction",
+         round((bmax - bmin) / max(omax - omin, 1e-9), 2),
+         "straggler elimination"),
+    ]
+    return emit(rows, f"Fig.14 env-setup distribution ({gpus} GPUs)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf markdown tables
+from the dry-run JSONL artifacts.
+
+    PYTHONPATH=src python benchmarks/make_experiments_tables.py
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DATA = Path(__file__).parent / "data"
+
+
+def load(name):
+    f = DATA / name
+    if not f.exists():
+        return []
+    return [json.loads(l) for l in f.read_text().splitlines() if l.strip()]
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | step | compile_s | peak GiB/dev | "
+           "HLO TFLOP/dev | HLO GB/dev | coll GB/dev | top collectives |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        c = r["collectives"]
+        top = sorted(c["by_op"].items(), key=lambda kv: -kv[1])[:2]
+        tops = ", ".join(f"{k} {v / 1e9:.2f}GB" for k, v in top) or "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step_kind']} "
+            f"| {r['compile_s']} "
+            f"| {fmt_bytes(r['memory'].get('peak_memory_in_bytes', 0))} "
+            f"| {r['cost']['flops'] / 1e12:.3f} "
+            f"| {r['cost']['bytes accessed'] / 1e9:.2f} "
+            f"| {c['total'] / 1e9:.3f} | {tops} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | mesh | step | compute_s | memory_s | "
+           "collective_s | bottleneck | useful_flops |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step_kind']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['bottleneck']}** "
+            f"| {rl['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def perf_table(base_recs, variant_recs, arch, shape):
+    rows = [r for r in base_recs
+            if r["arch"] == arch and r["shape"] == shape
+            and r["mesh"] == "16x16"]
+    rows += [r for r in variant_recs
+             if r["arch"] == arch and r["shape"] == shape]
+    out = [f"### {arch} x {shape}",
+           "",
+           "| variant | compute_s | memory_s | collective_s | dominant | "
+           "peak GiB |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        tag = r.get("tag") or "baseline (paper-faithful)"
+        dom = rl["bottleneck"]
+        out.append(
+            f"| {tag} | {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {dom} "
+            f"| {fmt_bytes(r['memory'].get('peak_memory_in_bytes', 0))} |")
+    return "\n".join(out)
+
+
+def main():
+    single = [r for r in load("dryrun_single.jsonl") if not r["tiny"]]
+    multi = [r for r in load("dryrun_multipod.jsonl") if not r["tiny"]]
+    perf = load("perf_variants.jsonl")
+
+    print("## §Dry-run (single-pod 16x16)\n")
+    print(dryrun_table(single))
+    print("\n## §Dry-run (multi-pod 2x16x16)\n")
+    print(dryrun_table(multi))
+    print("\n## §Roofline (single-pod baselines)\n")
+    print(roofline_table(single))
+    print("\n## §Roofline (multi-pod)\n")
+    print(roofline_table(multi))
+    print("\n## §Perf variants\n")
+    for arch, shape in [("qwen1.5-110b", "train_4k"),
+                        ("zamba2-1.2b", "train_4k"),
+                        ("dbrx-132b", "train_4k")]:
+        print(perf_table(single, perf, arch, shape))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one module per paper figure/table.
+
+``PYTHONPATH=src python -m benchmarks.run``  runs everything and prints
+``name,value,derived`` CSV blocks per benchmark.
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig01_cluster_waste",
+    "benchmarks.fig03_startup_scale",
+    "benchmarks.fig04_startups_per_job",
+    "benchmarks.fig05_stage_breakdown",
+    "benchmarks.fig06_straggler_scale",
+    "benchmarks.fig07_install_tail",
+    "benchmarks.fig12_e2e_startup",
+    "benchmarks.fig13_breakdown",
+    "benchmarks.fig14_env_straggler",
+    "benchmarks.bench_striped_io",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_roofline",
+    "benchmarks.beyond_paper",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = []
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(name)
+            mod.run()
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s\n")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("FAILED:", ", ".join(failures))
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

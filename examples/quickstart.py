@@ -1,0 +1,55 @@
+"""Quickstart: train a tiny assigned-architecture model on CPU with the
+full stack (synthetic data -> sharded train step -> AdamW), profiled by the
+BootSeer stage logger.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen2.5-3b]
+"""
+
+import argparse
+import time
+
+from repro.configs import ARCHS, get_tiny
+from repro.core.profiler import StageAnalysisService, StageLogger
+from repro.core.stages import Stage
+from repro.models.model import Model
+from repro.sharding.rules import single_device_rules
+from repro.train.loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args()
+
+    log = StageLogger("quickstart", "node000")
+    svc = StageAnalysisService()
+
+    with log.stage(Stage.MODEL_INIT):
+        rules = single_device_rules()
+        cfg = get_tiny(args.arch)
+        model = Model(cfg, rules)
+        print(f"arch={cfg.name}  type={cfg.arch_type}  "
+              f"params={model.count_params():,}")
+
+    log.begin(Stage.TRAINING)
+    t0 = time.perf_counter()
+    _, _, hist = train_loop(model, batch=args.batch, seq_len=args.seq_len,
+                            steps=args.steps, log_every=10)
+    dt = time.perf_counter() - t0
+    log.end(Stage.TRAINING)
+
+    svc.ingest_log(log.lines())
+    d = svc.node_stage_durations("quickstart")["node000"]
+    print(f"\nloss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"in {args.steps} steps ({dt:.1f}s)")
+    print(f"profiled stages: "
+          f"model_init {d['model_init']:.2f}s, training {d['training']:.2f}s")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

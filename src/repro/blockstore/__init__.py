@@ -1,0 +1,5 @@
+from repro.blockstore.image import build_image, ImageManifest  # noqa: F401
+from repro.blockstore.registry import Registry  # noqa: F401
+from repro.blockstore.lazy import LazyImageClient  # noqa: F401
+from repro.blockstore.prefetch import HotBlockService, prefetch_image  # noqa: F401
+from repro.blockstore.p2p import PeerGroup  # noqa: F401

@@ -1,0 +1,127 @@
+"""Lazy (on-demand) image client with access-trace recording.
+
+Models the container runtime's page-fault-style data path: file reads hit
+the local block cache; misses fetch the block from a peer (if a PeerGroup is
+attached) or the registry.  Every first access is recorded — (file, block
+index, monotonic order) — which is exactly the trace the record-and-prefetch
+service (repro.blockstore.prefetch) persists per image digest.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from pathlib import Path
+from typing import Optional
+
+from repro.blockstore.image import ImageManifest
+from repro.blockstore.registry import Registry
+
+
+class LazyImageClient:
+    def __init__(self, manifest: ImageManifest, registry: Registry,
+                 cache_dir: str | Path, *, node_id: str = "node0",
+                 peers: Optional["PeerGroup"] = None):
+        self.manifest = manifest
+        self.registry = registry
+        self.cache_dir = Path(cache_dir)
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        self.node_id = node_id
+        self.peers = peers
+        self._files = manifest.file_map()
+        self._lock = threading.Lock()
+        self._trace: list[dict] = []
+        self._t0 = time.perf_counter()
+        self.stats = {"hits": 0, "misses": 0, "peer_fetches": 0,
+                      "registry_fetches": 0, "bytes_fetched": 0}
+        if peers is not None:
+            peers.join(self)
+
+    # ----- block cache -----
+
+    def _cache_path(self, h: str) -> Path:
+        return self.cache_dir / h
+
+    def has_block(self, h: str) -> bool:
+        return self._cache_path(h).exists()
+
+    def get_cached_block(self, h: str) -> bytes:
+        return self._cache_path(h).read_bytes()
+
+    def _fetch_block(self, h: str) -> bytes:
+        """Peer-first fetch with registry fallback."""
+        if self.peers is not None:
+            data = self.peers.fetch(h, requester=self)
+            if data is not None:
+                self.stats["peer_fetches"] += 1
+                self._store(h, data)
+                return data
+        data = self.registry.get_block(h)
+        self.stats["registry_fetches"] += 1
+        self._store(h, data)
+        return data
+
+    def _store(self, h: str, data: bytes):
+        self.stats["bytes_fetched"] += len(data)
+        p = self._cache_path(h)
+        if not p.exists():
+            tmp = p.with_suffix(".tmp" + self.node_id)
+            tmp.write_bytes(data)
+            tmp.replace(p)
+
+    def ensure_block(self, h: str, *, record: bool = False,
+                     file_path: str = "", block_idx: int = -1) -> bytes:
+        if self.has_block(h):
+            self.stats["hits"] += 1
+            data = self.get_cached_block(h)
+        else:
+            self.stats["misses"] += 1
+            data = self._fetch_block(h)
+        if record:
+            with self._lock:
+                self._trace.append({
+                    "hash": h, "file": file_path, "block": block_idx,
+                    "t": time.perf_counter() - self._t0})
+        return data
+
+    # ----- file-level reads (what the starting container does) -----
+
+    def read_file(self, path: str, offset: int = 0, length: int = -1) -> bytes:
+        fe = self._files[path]
+        if length < 0:
+            length = fe.size - offset
+        length = min(length, fe.size - offset)
+        if length <= 0:
+            return b""
+        bs = self.manifest.block_size
+        out = bytearray()
+        first, last = offset // bs, (offset + length - 1) // bs
+        for bi in range(first, last + 1):
+            data = self.ensure_block(fe.blocks[bi], record=True,
+                                     file_path=path, block_idx=bi)
+            lo = max(offset - bi * bs, 0)
+            hi = min(offset + length - bi * bs, len(data))
+            out += data[lo:hi]
+        return bytes(out)
+
+    def exists(self, path: str) -> bool:
+        return path in self._files
+
+    def listdir(self) -> list[str]:
+        return sorted(self._files)
+
+    # ----- trace -----
+
+    def access_trace(self) -> list[dict]:
+        """Block-level access records in first-touch order (deduped)."""
+        seen, out = set(), []
+        for rec in self._trace:
+            if rec["hash"] not in seen:
+                seen.add(rec["hash"])
+                out.append(rec)
+        return out
+
+    def cached_fraction(self) -> float:
+        blocks = self.manifest.unique_blocks
+        have = sum(1 for h in blocks if self.has_block(h))
+        return have / max(len(blocks), 1)

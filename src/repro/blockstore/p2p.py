@@ -1,0 +1,45 @@
+"""Peer-to-peer block sharing between a job's worker nodes (§4.2).
+
+Multiple machines pulling the same image concurrently fetch blocks from
+peers that already hold them instead of hammering the registry; this spreads
+the bandwidth load across links and removes the registry as the single
+contended source (§3.4's throttling failure mode).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class PeerGroup:
+    def __init__(self, per_peer_throttle=None):
+        self._peers: list = []
+        self._lock = threading.Lock()
+        self.per_peer_throttle = per_peer_throttle
+        self.stats: dict[str, dict] = {}
+
+    def join(self, client):
+        with self._lock:
+            self._peers.append(client)
+            self.stats[client.node_id] = {"blocks_served": 0,
+                                          "bytes_served": 0}
+
+    def fetch(self, h: str, requester) -> Optional[bytes]:
+        """Round-robin over peers that have the block (excluding requester)."""
+        with self._lock:
+            candidates = [p for p in self._peers
+                          if p is not requester and p.has_block(h)]
+        if not candidates:
+            return None
+        # pick the least-loaded peer — spreads load across links
+        peer = min(candidates,
+                   key=lambda p: self.stats[p.node_id]["bytes_served"])
+        data = peer.get_cached_block(h)
+        if self.per_peer_throttle:
+            with self.per_peer_throttle:
+                self.per_peer_throttle.charge(len(data))
+        with self._lock:
+            self.stats[peer.node_id]["blocks_served"] += 1
+            self.stats[peer.node_id]["bytes_served"] += len(data)
+        return data

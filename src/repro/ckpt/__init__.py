@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import Checkpointer  # noqa: F401
+from repro.ckpt.index import TensorIndex, TensorEntry  # noqa: F401

@@ -1,0 +1,156 @@
+"""JAX pytree checkpointing over the (striped) DFS — BootSeer §4.4.
+
+Save: flatten the pytree with key paths, serialize leaves into one logical
+stream, write via ``StripedWriter`` (parallel across stripe files), store the
+``TensorIndex`` manifest alongside.
+
+Restore: read the manifest, then fetch tensors in parallel.  The
+*sharding-aware* path reads only the byte ranges a host's shard needs
+(leading-dim sharded tensors map to contiguous row ranges; anything else
+falls back to a full read) — this is what keeps resume time proportional to
+``bytes_per_host`` rather than total checkpoint size.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.index import TensorIndex
+from repro.dfs.hdfs import HdfsCluster
+from repro.dfs.striped import StripedReader, StripedWriter
+
+
+def _flat_with_names(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class Checkpointer:
+    def __init__(self, hdfs: HdfsCluster, base: str = "/ckpt", *,
+                 striped: bool = True, width: int = 8, threads: int = 8):
+        self.hdfs = hdfs
+        self.base = base.rstrip("/")
+        self.striped = striped
+        self.width = width
+        self.threads = threads
+
+    # ----- paths -----
+
+    def data_path(self, step: int) -> str:
+        return f"{self.base}/step_{step:08d}.data"
+
+    def index_path(self, step: int) -> str:
+        return f"{self.base}/step_{step:08d}.index.json"
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.hdfs.listdir(self.base):
+            if p.endswith(".index.json"):
+                out.append(int(p.split("step_")[1].split(".")[0]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ----- save -----
+
+    def save(self, step: int, *trees: Any, meta: Optional[dict] = None) -> TensorIndex:
+        index = TensorIndex(meta=dict(meta or {}, step=step,
+                                      n_trees=len(trees)))
+        arrays: list[np.ndarray] = []
+        for ti, tree in enumerate(trees):
+            for name, leaf in _flat_with_names(tree):
+                arr = np.asarray(leaf)
+                if arr.dtype == jax.numpy.bfloat16:
+                    arr = arr.view(np.uint16)  # store bf16 bit pattern
+                    index.add(f"t{ti}{name}#bf16", arr.dtype, arr.shape)
+                else:
+                    index.add(f"t{ti}{name}", arr.dtype, arr.shape)
+                arrays.append(arr)
+        if self.striped:
+            with StripedWriter(self.hdfs, self.data_path(step),
+                               width=self.width, threads=self.threads) as w:
+                for arr in arrays:
+                    w.write(arr.tobytes())
+        else:
+            self.hdfs.write(self.data_path(step),
+                            b"".join(a.tobytes() for a in arrays))
+        self.hdfs.write(self.index_path(step), index.to_json().encode())
+        return index
+
+    # ----- restore -----
+
+    def load_index(self, step: int) -> TensorIndex:
+        return TensorIndex.from_json(
+            self.hdfs.read(self.index_path(step)).decode())
+
+    def _reader(self, step: int):
+        attrs = self.hdfs.attrs(self.data_path(step))
+        if "striped" in attrs:
+            return StripedReader(self.hdfs, self.data_path(step),
+                                 threads=self.threads)
+        hdfs, path = self.hdfs, self.data_path(step)
+
+        class _Plain:
+            def pread(self, off, ln):
+                return hdfs.pread(path, off, ln)
+        return _Plain()
+
+    def restore(self, step: int, *likes: Any,
+                shard_slices: Optional[dict] = None) -> tuple:
+        """Restore trees congruent to ``likes`` (pytrees of arrays or
+        ShapeDtypeStructs).
+
+        ``shard_slices``: optional {tensor_name: (start_row, n_rows)} for
+        sharding-aware partial restore of leading-dim sharded tensors; the
+        returned leaves then hold only those rows.
+        """
+        index = self.load_index(step)
+        reader = self._reader(step)
+        results: dict[str, np.ndarray] = {}
+        lock = threading.Lock()
+
+        def fetch(name_entry):
+            name, e = name_entry
+            bf16 = name.endswith("#bf16")
+            rows = (shard_slices or {}).get(name)
+            if rows is not None and len(e.shape) >= 1:
+                start, n = rows
+                rb = e.row_bytes()
+                raw = reader.pread(e.offset + start * rb, n * rb)
+                shape = (n,) + e.shape[1:]
+            else:
+                raw = reader.pread(e.offset, e.nbytes)
+                shape = e.shape
+            arr = np.frombuffer(raw, dtype=e.dtype).reshape(shape)
+            if bf16:
+                arr = arr.view(jax.numpy.bfloat16)
+            with lock:
+                results[name] = arr
+
+        with ThreadPoolExecutor(self.threads) as ex:
+            list(ex.map(fetch, index.entries.items()))
+
+        out = []
+        for ti, like in enumerate(likes):
+            names_leaves = _flat_with_names(like)
+            leaves = []
+            for name, leaf in names_leaves:
+                key = f"t{ti}{name}"
+                arr = results.get(key, results.get(key + "#bf16"))
+                assert arr is not None, f"missing tensor {key}"
+                leaves.append(arr)
+            tree_def = jax.tree_util.tree_structure(like)
+            out.append(jax.tree_util.tree_unflatten(tree_def, leaves))
+        return tuple(out)
+
+    def restore_bytes_for_shard(self, step: int, fraction: float) -> int:
+        """How many bytes a host reading 1/N of every tensor fetches."""
+        index = self.load_index(step)
+        return int(sum(e.nbytes * fraction for e in index.entries.values()))

@@ -1,0 +1,63 @@
+"""Checkpoint tensor manifest: name -> (dtype, shape, offset) within the
+single logical checkpoint stream stored (striped) in the DFS."""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorEntry:
+    name: str
+    dtype: str
+    shape: tuple
+    offset: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * int(np.prod(self.shape or (1,))))
+
+    def row_bytes(self) -> int:
+        """Bytes of one leading-dim row (for leading-dim sharded reads)."""
+        inner = int(np.prod(self.shape[1:] or (1,)))
+        return inner * np.dtype(self.dtype).itemsize
+
+
+class TensorIndex:
+    def __init__(self, entries: Iterable[TensorEntry] = (), meta: dict = None):
+        self.entries: dict[str, TensorEntry] = {e.name: e for e in entries}
+        self.meta = meta or {}
+
+    @property
+    def total_bytes(self) -> int:
+        if not self.entries:
+            return 0
+        last = max(self.entries.values(), key=lambda e: e.offset)
+        return last.offset + last.nbytes
+
+    def add(self, name: str, dtype, shape) -> TensorEntry:
+        e = TensorEntry(name=name, dtype=str(np.dtype(dtype)),
+                        shape=tuple(int(s) for s in shape),
+                        offset=self.total_bytes)
+        self.entries[name] = e
+        return e
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "meta": self.meta,
+            "tensors": [
+                {"name": e.name, "dtype": e.dtype, "shape": list(e.shape),
+                 "offset": e.offset}
+                for e in sorted(self.entries.values(), key=lambda e: e.offset)
+            ]})
+
+    @classmethod
+    def from_json(cls, raw: str) -> "TensorIndex":
+        d = json.loads(raw)
+        return cls((TensorEntry(name=t["name"], dtype=t["dtype"],
+                                shape=tuple(t["shape"]), offset=t["offset"])
+                    for t in d["tensors"]), meta=d.get("meta", {}))

@@ -1,0 +1,19 @@
+"""mixtral-8x22b — MoE, 8 experts top-2, sliding-window attention
+[arXiv:2401.04088]."""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    source="arXiv:2401.04088",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    moe=MoEConfig(num_experts=8, experts_per_token=2),
+    sliding_window=4096,
+    rope_theta=1e6,
+)

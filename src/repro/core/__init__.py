@@ -1,0 +1,8 @@
+"""BootSeer's primary contribution: the startup profiling system (§4.1) and
+the startup orchestrator wiring the three optimizations together (§4.2-4.4).
+"""
+
+from repro.core.stages import Stage, STAGE_ORDER, GPU_CONSUMING, SYNC_STAGES  # noqa: F401
+from repro.core.profiler import (  # noqa: F401
+    StageLogger, StageAnalysisService, StageEvent, parse_log)
+from repro.core.bootseer import BootseerRuntime, JobSpec, StartupResult  # noqa: F401

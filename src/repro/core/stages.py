@@ -1,0 +1,36 @@
+"""The startup stage model (BootSeer §2.2, Fig. 2).
+
+Scheduler Phase (no GPU resources consumed): RESOURCE_QUEUE, RESOURCE_ALLOC.
+Worker Phase (GPU-consuming — the true overhead): IMAGE_LOAD, ENV_SETUP,
+MODEL_INIT.  TRAINING marks the end of startup.
+
+Stages marked ``sync`` require a barrier: every worker must finish the stage
+before any worker proceeds — the straggler amplification mechanism of §3.3.
+"""
+
+from __future__ import annotations
+
+import enum
+
+
+class Stage(str, enum.Enum):
+    RESOURCE_QUEUE = "resource_queue"
+    RESOURCE_ALLOC = "resource_alloc"
+    IMAGE_LOAD = "image_load"
+    ENV_SETUP = "env_setup"
+    MODEL_INIT = "model_init"
+    TRAINING = "training"
+
+
+# canonical execution order
+STAGE_ORDER: tuple[Stage, ...] = (
+    Stage.RESOURCE_QUEUE, Stage.RESOURCE_ALLOC, Stage.IMAGE_LOAD,
+    Stage.ENV_SETUP, Stage.MODEL_INIT, Stage.TRAINING)
+
+# stages that actively burn GPU-hours (the machines are allocated)
+GPU_CONSUMING: frozenset = frozenset(
+    {Stage.IMAGE_LOAD, Stage.ENV_SETUP, Stage.MODEL_INIT})
+
+# stages ending in a cross-node synchronization barrier (Fig. 2 "(Sync)")
+SYNC_STAGES: frozenset = frozenset(
+    {Stage.IMAGE_LOAD, Stage.ENV_SETUP, Stage.MODEL_INIT})

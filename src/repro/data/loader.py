@@ -1,0 +1,31 @@
+"""Sharded batch loader: turns the synthetic stream into device-ready
+(tokens, labels) batches placed with the step's input shardings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticStream
+from repro.sharding.rules import Rules
+
+
+class ShardedLoader:
+    def __init__(self, stream: SyntheticStream, rules: Rules,
+                 batch: int, seq_len: int):
+        self.stream = stream
+        self.rules = rules
+        self.batch = batch
+        self.seq_len = seq_len
+        spec = rules.act_btd(batch)
+        from jax.sharding import PartitionSpec as P
+        self.tok_sharding = rules.named(P(spec[0], None))
+
+    def __call__(self, step: int) -> dict:
+        raw = self.stream.batch(step, self.batch, self.seq_len)
+        tokens = jnp.asarray(raw[:, :-1])
+        labels = jnp.asarray(raw[:, 1:])
+        tokens = jax.device_put(tokens, self.tok_sharding)
+        labels = jax.device_put(labels, self.tok_sharding)
+        return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,3 @@
+from repro.dfs.hdfs import HdfsCluster  # noqa: F401
+from repro.dfs.striped import StripedWriter, StripedReader  # noqa: F401
+from repro.dfs.fuse import HdfsFuseMount  # noqa: F401

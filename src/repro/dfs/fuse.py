@@ -1,0 +1,97 @@
+"""HDFS-FUSE: a file-like mounted view of the DFS.
+
+The paper mounts remote HDFS directories into worker containers via a FUSE
+sidecar; kernel mounts are unavailable in this sandbox, so the "mount" is an
+object exposing ``open(path)`` -> file-like handles.  Striped files
+transparently get the parallel reader.
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Optional
+
+from repro.dfs.hdfs import HdfsCluster
+from repro.dfs.striped import StripedReader
+
+
+class HdfsFuseFile:
+    """Read-only file handle with read/seek/pread over a DFS file."""
+
+    def __init__(self, mount: "HdfsFuseMount", path: str):
+        self._mount = mount
+        self.path = path
+        self._pos = 0
+        meta = mount.hdfs.attrs(path)
+        if "striped" in meta:
+            self._reader: Optional[StripedReader] = StripedReader(
+                mount.hdfs, path)
+            self._size = self._reader.size
+        else:
+            self._reader = None
+            self._size = mount.hdfs.size(path)
+
+    def __len__(self):
+        return self._size
+
+    def seek(self, pos: int, whence: int = io.SEEK_SET) -> int:
+        if whence == io.SEEK_SET:
+            self._pos = pos
+        elif whence == io.SEEK_CUR:
+            self._pos += pos
+        else:
+            self._pos = self._size + pos
+        return self._pos
+
+    def tell(self) -> int:
+        return self._pos
+
+    def pread(self, offset: int, length: int) -> bytes:
+        if self._reader is not None:
+            return self._reader.pread(offset, length)
+        return self._mount.hdfs.pread(self.path, offset, length)
+
+    def read(self, length: int = -1) -> bytes:
+        if length < 0:
+            length = self._size - self._pos
+        data = self.pread(self._pos, length)
+        self._pos += len(data)
+        return data
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        pass
+
+
+class HdfsFuseMount:
+    """The 'mounted directory': open() remote paths as local file objects."""
+
+    def __init__(self, hdfs: HdfsCluster, prefix: str = ""):
+        self.hdfs = hdfs
+        self.prefix = prefix.rstrip("/")
+
+    def _full(self, path: str) -> str:
+        return f"{self.prefix}/{path.lstrip('/')}" if self.prefix else path
+
+    def open(self, path: str) -> HdfsFuseFile:
+        return HdfsFuseFile(self, self._full(path))
+
+    def exists(self, path: str) -> bool:
+        return self.hdfs.exists(self._full(path))
+
+    def listdir(self, path: str = "") -> list[str]:
+        return self.hdfs.listdir(self._full(path) if path else self.prefix)
+
+    def write(self, path: str, data: bytes, striped: bool = False,
+              width: int = 8):
+        full = self._full(path)
+        if striped:
+            from repro.dfs.striped import write_striped
+            write_striped(self.hdfs, full, data, width=width)
+        else:
+            self.hdfs.write(full, data)

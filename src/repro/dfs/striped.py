@@ -1,0 +1,198 @@
+"""Striped layout for checkpoint files (BootSeer §4.4, Fig. 11).
+
+The logical file is split into 1 MB chunks; chunks are grouped into 4 MB
+stripe units and the units round-robin across ``width`` physical files, each
+placed in a DIFFERENT DataNode group.  Reads and writes therefore run with
+``width``-way parallelism (one thread per physical file) instead of being
+serialized inside a single 512 MB HDFS block.
+
+Layout math for chunk ``i`` (chunk = 1 MB, stripe = 4 MB = ``spc`` chunks):
+    unit        u = i // spc
+    file        f = u % width
+    unit-in-file  = u // width
+    offset-in-file = (u // width) * stripe + (i % spc) * chunk
+
+``StripedReader.pread`` reads an arbitrary (offset, length) range touching
+only the chunks it needs — this is what makes *sharding-aware* checkpoint
+resumption possible (each host fetches only its shard's byte ranges).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.dfs.hdfs import BlockMeta, HdfsCluster
+
+CHUNK = 1 * 1024 * 1024
+STRIPE = 4 * 1024 * 1024
+
+
+@dataclass(frozen=True)
+class StripedMeta:
+    size: int
+    width: int
+    chunk: int
+    stripe: int
+    files: tuple  # (group, name) per physical file
+
+    @property
+    def spc(self) -> int:  # chunks per stripe unit
+        return self.stripe // self.chunk
+
+    def locate(self, chunk_idx: int) -> tuple[int, int]:
+        """-> (file index, offset within that physical file)."""
+        u = chunk_idx // self.spc
+        f = u % self.width
+        off = (u // self.width) * self.stripe + (chunk_idx % self.spc) * self.chunk
+        return f, off
+
+
+class StripedWriter:
+    """Parallel striped write of a logical stream."""
+
+    def __init__(self, hdfs: HdfsCluster, path: str, *, width: int = 8,
+                 chunk: int = CHUNK, stripe: int = STRIPE,
+                 threads: Optional[int] = None):
+        assert stripe % chunk == 0
+        self.hdfs = hdfs
+        self.path = path
+        self.width = min(width, hdfs.num_groups)
+        self.chunk = chunk
+        self.stripe = stripe
+        self.threads = threads or self.width
+        self._buf = bytearray()
+        self._size = 0
+        self._flushed = 0
+        self._files = []
+        self._handles = []
+        import zlib
+        tag = zlib.crc32(path.encode()) % 10 ** 8
+        for f in range(self.width):
+            group = (f * max(hdfs.num_groups // self.width, 1)) % hdfs.num_groups
+            name = f"stripe_{tag:08d}_{f}"
+            self._files.append((group, name))
+            self._handles.append(hdfs.open_group_file(group, name, "wb"))
+        self._lock = threading.Lock()
+
+    def write(self, data: bytes):
+        self._buf += data
+        self._size += len(data)
+        full = (len(self._buf) // self.chunk) * self.chunk
+        if full:
+            self._flush(bytes(self._buf[:full]))
+            del self._buf[:full]
+
+    def _flush(self, data: bytes):
+        meta = self._meta_for(self._size)  # width/chunk/stripe fixed
+        start_chunk = self._flushed // self.chunk
+        self._flushed += len(data)
+        # group chunk writes per file, then write in parallel
+        per_file: dict[int, list[tuple[int, bytes]]] = {}
+        for j in range(0, len(data), self.chunk):
+            ci = start_chunk + j // self.chunk
+            f, off = meta.locate(ci)
+            per_file.setdefault(f, []).append((off, data[j:j + self.chunk]))
+
+        def write_file(f):
+            h = self._handles[f]
+            for off, payload in per_file[f]:
+                h.seek(off)
+                h.write(payload)
+            if self.hdfs.throttle:
+                n = sum(len(p) for _, p in per_file[f])
+                with self.hdfs.throttle:
+                    self.hdfs.throttle.charge(n)
+
+        with ThreadPoolExecutor(self.threads) as ex:
+            list(ex.map(write_file, per_file))
+
+    def _meta_for(self, size: int) -> StripedMeta:
+        return StripedMeta(size=size, width=self.width, chunk=self.chunk,
+                           stripe=self.stripe, files=tuple(self._files))
+
+    def close(self):
+        if self._buf:
+            pad = bytes(self._buf)
+            self._buf.clear()
+            self._flush(pad + b"\0" * ((-len(pad)) % self.chunk))
+        for h in self._handles:
+            h.close()
+        meta = self._meta_for(self._size)
+        blocks = [BlockMeta(group=g, path=n, length=0)
+                  for g, n in meta.files]
+        self.hdfs.register_raw(
+            self.path, self._size, blocks,
+            attrs={"striped": {
+                "size": meta.size, "width": meta.width, "chunk": meta.chunk,
+                "stripe": meta.stripe, "files": list(meta.files)}})
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class StripedReader:
+    """Parallel positional reads of a striped file."""
+
+    def __init__(self, hdfs: HdfsCluster, path: str,
+                 threads: Optional[int] = None):
+        self.hdfs = hdfs
+        raw = hdfs.attrs(path)["striped"]
+        self.meta = StripedMeta(size=raw["size"], width=raw["width"],
+                                chunk=raw["chunk"], stripe=raw["stripe"],
+                                files=tuple(tuple(f) for f in raw["files"]))
+        self.threads = threads or self.meta.width
+
+    @property
+    def size(self) -> int:
+        return self.meta.size
+
+    def pread(self, offset: int, length: int) -> bytes:
+        m = self.meta
+        length = min(length, m.size - offset)
+        if length <= 0:
+            return b""
+        first = offset // m.chunk
+        last = (offset + length - 1) // m.chunk
+        # gather the chunk reads, grouped per physical file
+        jobs: dict[int, list[tuple[int, int, int, int]]] = {}
+        for ci in range(first, last + 1):
+            f, base = m.locate(ci)
+            lo = max(offset - ci * m.chunk, 0)
+            hi = min(offset + length - ci * m.chunk, m.chunk)
+            dst = ci * m.chunk + lo - offset
+            jobs.setdefault(f, []).append((base + lo, hi - lo, dst, ci))
+
+        out = bytearray(length)
+
+        def read_file(f):
+            group, name = m.files[f]
+            n = 0
+            with self.hdfs.open_group_file(group, name, "rb") as h:
+                for off, ln, dst, _ in jobs[f]:
+                    h.seek(off)
+                    out[dst:dst + ln] = h.read(ln)
+                    n += ln
+            if self.hdfs.throttle:
+                with self.hdfs.throttle:
+                    self.hdfs.throttle.charge(n)
+
+        with ThreadPoolExecutor(self.threads) as ex:
+            list(ex.map(read_file, jobs))
+        return bytes(out)
+
+    def read_all(self) -> bytes:
+        return self.pread(0, self.meta.size)
+
+
+def write_striped(hdfs: HdfsCluster, path: str, data: bytes, *,
+                  width: int = 8, chunk: int = CHUNK, stripe: int = STRIPE):
+    with StripedWriter(hdfs, path, width=width, chunk=chunk,
+                       stripe=stripe) as w:
+        w.write(data)

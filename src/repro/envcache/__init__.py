@@ -1,0 +1,2 @@
+from repro.envcache.snapshot import (  # noqa: F401
+    EnvCache, snapshot_dir, diff_snapshots, job_cache_key)

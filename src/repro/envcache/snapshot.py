@@ -1,0 +1,131 @@
+"""Job-level environment cache — dependency snapshotting (BootSeer §4.3,
+Fig. 10).
+
+First run of a job: snapshot the *target directory* (e.g. site-packages)
+before and after the Environment Setup phase on node 0; every file added or
+modified is packed into a compressed archive and uploaded to the DFS keyed
+by the job's parameters.  Subsequent runs / restarts / node replacements of
+the SAME job restore the archive and skip every install command.  If the job
+parameters change (dependency versions, GPU type, OS, region...), the key
+changes, so the stale cache simply never matches — expiry is structural.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import tarfile
+import time
+from pathlib import Path
+from typing import Optional
+
+try:
+    import zstandard as zstd
+
+    def _compress(data: bytes) -> bytes:
+        return zstd.ZstdCompressor(level=3).compress(data)
+
+    def _decompress(data: bytes) -> bytes:
+        return zstd.ZstdDecompressor().decompress(data)
+
+    COMPRESSION = "zstd"
+except ImportError:  # pragma: no cover
+    import gzip
+
+    def _compress(data: bytes) -> bytes:
+        return gzip.compress(data, 6)
+
+    def _decompress(data: bytes) -> bytes:
+        return gzip.decompress(data)
+
+    COMPRESSION = "gzip"
+
+
+def snapshot_dir(target: str | Path) -> dict[str, tuple[int, int]]:
+    """{relpath: (size, mtime_ns)} for every file under target."""
+    target = Path(target)
+    snap = {}
+    if not target.exists():
+        return snap
+    for p in target.rglob("*"):
+        if p.is_file():
+            st = p.stat()
+            snap[str(p.relative_to(target))] = (st.st_size, st.st_mtime_ns)
+    return snap
+
+
+def diff_snapshots(before: dict, after: dict) -> list[str]:
+    """Paths added or modified between two snapshots."""
+    return sorted(p for p, sig in after.items()
+                  if p not in before or before[p] != sig)
+
+
+def job_cache_key(job_params: dict) -> str:
+    """Deterministic cache key over the job's runtime parameters."""
+    blob = json.dumps(job_params, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:24]
+
+
+class EnvCache:
+    """Create/restore environment caches in the DFS (via HDFS-FUSE mount)."""
+
+    def __init__(self, mount, base: str = "/envcache"):
+        self.mount = mount  # HdfsFuseMount
+        self.base = base.rstrip("/")
+
+    def _data_path(self, key: str) -> str:
+        return f"{self.base}/{key}.tar.{COMPRESSION}"
+
+    def _meta_path(self, key: str) -> str:
+        return f"{self.base}/{key}.meta.json"
+
+    def exists(self, key: str) -> bool:
+        return self.mount.exists(self._data_path(key)) and \
+            self.mount.exists(self._meta_path(key))
+
+    def expire(self, key: str):
+        for p in (self._data_path(key), self._meta_path(key)):
+            if self.mount.exists(p):
+                self.mount.hdfs.delete(self.mount._full(p))
+
+    # ----- create (first run, node 0) -----
+
+    def create(self, key: str, target: str | Path, before: dict,
+               job_params: Optional[dict] = None, *, striped: bool = True) -> dict:
+        """Capture the diff of ``target`` vs ``before`` and upload."""
+        target = Path(target)
+        after = snapshot_dir(target)
+        changed = diff_snapshots(before, after)
+        buf = io.BytesIO()
+        with tarfile.open(fileobj=buf, mode="w") as tar:
+            for rel in changed:
+                tar.add(target / rel, arcname=rel)
+        raw = buf.getvalue()
+        packed = _compress(raw)
+        self.mount.write(self._data_path(key), packed, striped=striped)
+        meta = {"key": key, "files": len(changed),
+                "raw_bytes": len(raw), "packed_bytes": len(packed),
+                "compression": COMPRESSION, "created": time.time(),
+                "job_params": job_params or {}}
+        self.mount.write(self._meta_path(key),
+                         json.dumps(meta).encode())
+        return meta
+
+    # ----- restore (subsequent runs, every node) -----
+
+    def restore(self, key: str, target: str | Path) -> Optional[dict]:
+        """Extract the cached environment into ``target``.  Returns the cache
+        meta, or None when no valid cache exists (caller falls back to the
+        real install commands)."""
+        if not self.exists(key):
+            return None
+        meta = json.loads(self.mount.open(self._meta_path(key)).read())
+        packed = self.mount.open(self._data_path(key)).read()
+        raw = _decompress(packed)
+        target = Path(target)
+        target.mkdir(parents=True, exist_ok=True)
+        with tarfile.open(fileobj=io.BytesIO(raw)) as tar:
+            tar.extractall(target, filter="data")
+        return meta

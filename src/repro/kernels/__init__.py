@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot spots: flash attention and the
+Mamba2 SSD chunk scan.  Each has a pure-jnp oracle in ``ref.py`` and a
+model-layout wrapper in ``ops.py``; correctness is swept in
+``tests/test_kernels.py`` (interpret mode on CPU)."""
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.ssd import ssd_chunked_kernel  # noqa: F401
+from repro.kernels.ops import attention_op, ssd_op  # noqa: F401

@@ -1,0 +1,152 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native tiling: the grid is (batch*q_heads, Sq/block_q, Sk/block_k) with
+the KV-block dimension innermost, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch across the inner iterations and the output
+tile is written once on the last KV block.  Block shapes are MXU-aligned
+(128 x head_dim).  GQA is handled in the BlockSpec index maps: the kv-head
+index is derived from the q-head index (no materialized KV repeat).
+
+Causal / sliding-window masking uses absolute-position iotas; fully-masked
+KV blocks are skipped with ``pl.when`` (block-level early-out, the same
+optimization the pure-jnp path applies with ``skip_masked_blocks``).
+
+Target: TPU (MXU 128x128, VMEM tiles).  Validated on CPU in interpret mode
+against ``repro.kernels.ref.attention_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_k: int,
+                  causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+
+    # block-level reachability (early-out for fully masked KV blocks)
+    run = True
+    if causal:
+        run = jnp.logical_and(True, k_lo <= q_lo + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, qpos >= kpos)
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "num_kv_heads", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    num_kv_heads: int | None = None, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Sk, D].  Returns [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if num_kv_heads is not None:
+        assert hkv == num_kv_heads
+    g = hq // hkv
+    sk = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # pad sequence dims to block multiples
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    qf = q.reshape(b * hq, q.shape[2], d)
+    kf = k.reshape(b * hkv, k.shape[2], d)
+    vf = v.reshape(b * hkv, v.shape[2], d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        # GQA: q-head bh = bi*hq + h -> kv row bi*hkv + h // g
+        bi = bh // hq
+        h = bh % hq
+        return (bi * hkv + h // g, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_k=sk, causal=causal, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, nq * block_q, d)[:, :, :sq]

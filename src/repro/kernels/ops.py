@@ -1,0 +1,37 @@
+"""jit'd wrappers exposing the Pallas kernels in the model's tensor layout.
+
+The distributed (sharded) path lowers the pure-jnp implementations in
+``repro.models``; these ops are the TPU-target kernel entry points, used by
+the kernel benchmarks and validated in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd_chunked_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                 interpret: bool = False):
+    """Model layout: q [B, S, Hq, Dh], k/v [B, S, Hkv, Dh] ->
+    [B, S, Hq, Dh]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, A, B, C, D, *, chunk: int = 256,
+           interpret: bool = False):
+    """Model layout (see repro.models.ssm).  Returns (y, final_state)."""
+    return ssd_chunked_kernel(x, dt, A, B, C, D, chunk=chunk,
+                              interpret=interpret)

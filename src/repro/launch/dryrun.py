@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes, extract
+memory_analysis / cost_analysis / collective bytes for §Roofline.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run is allowed to see 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out out.jsonl]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, get_tiny
+from repro.launch.mesh import make_production_mesh
+from repro.models.frontend import needs_embeddings
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.roofline.analysis import analyze, format_table
+from repro.roofline.hlo import collective_bytes_from_hlo
+from repro.roofline.jaxpr_cost import analytic_cost
+from repro.sharding.rules import make_rules
+
+# long_500k needs sub-quadratic attention / bounded state (DESIGN.md §5):
+# SSM, hybrid (windowed shared attention), and SWA archs run it; pure
+# full-attention archs skip it.
+LONG_OK = {"mamba2-370m", "zamba2-1.2b", "mixtral-8x22b"}
+
+
+def combos():
+    for arch in ARCHS:
+        for shape_id in SHAPES:
+            if shape_id == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, shape_id
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _tree_sds(shapes, dtypes):
+    return jax.tree.map(
+        lambda s, d: _sds(s, d), shapes, dtypes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, int) for i in x))
+
+
+def build_lowerable(model: Model, shape, *, tiny: bool = False):
+    """Returns (jitted_fn, args of ShapeDtypeStructs, step_kind)."""
+    cfg = model.cfg
+    b = shape.global_batch if not tiny else min(shape.global_batch, 4)
+    s = shape.seq_len if not tiny else min(shape.seq_len, 256)
+    emb = needs_embeddings(cfg)
+
+    pshapes = model.param_shapes()
+
+    if shape.kind == "train":
+        from repro.train.step import jit_train_step
+        fn = jit_train_step(model, AdamWConfig(), b, with_embeddings=emb,
+                            with_mrope=cfg.mrope)
+        oshapes = {"mu": pshapes, "nu": pshapes,
+                   "step": _sds((), jnp.int32)}
+        batch = {"labels": _sds((b, s), jnp.int32)}
+        if emb:
+            batch["embeddings"] = _sds((b, s, cfg.d_model), jnp.float32)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.mrope:
+            batch["mrope_pos"] = _sds((b, s, 3), jnp.int32)
+        return fn, (pshapes, oshapes, batch), "train"
+
+    if shape.kind == "prefill":
+        from repro.serve.step import jit_prefill
+        fn = jit_prefill(model, b, s, with_embeddings=emb,
+                         with_mrope=cfg.mrope)
+        batch = {}
+        if emb:
+            batch["embeddings"] = _sds((b, s, cfg.d_model), jnp.float32)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.mrope:
+            batch["mrope_pos"] = _sds((b, s, 3), jnp.int32)
+        return fn, (pshapes, batch), "prefill"
+
+    # decode: ONE new token against a seq_len cache
+    from repro.serve.step import jit_decode_step
+    fn = jit_decode_step(model, b, s)
+    cshapes = _tree_sds(model.cache_shapes(b, s),
+                        model.cache_dtypes(b, s))
+    args = (pshapes, _sds((b, 1), jnp.int32), cshapes,
+            _sds((), jnp.int32))
+    return fn, args, "decode"
+
+
+def run_one(arch: str, shape_id: str, *, multi_pod: bool = False,
+            moe_sharding: str = "tp", tiny: bool = False,
+            q_chunk: int = 1024, k_chunk: int = 1024,
+            remat: bool = True, skip_masked_blocks: bool = True,
+            param_gather_dtype: str = "float32",
+            ssd_compute_dtype: str = "float32", ssm_chunk: int = 0,
+            serving_layout: bool = False, seq_sharded_acts: bool = False,
+            save_hlo: str = "", verbose: bool = True,
+            tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    rules = make_rules(mesh, moe_sharding=moe_sharding, remat=remat,
+                       q_chunk=q_chunk, k_chunk=k_chunk,
+                       skip_masked_blocks=skip_masked_blocks,
+                       param_gather_dtype=param_gather_dtype,
+                       ssd_compute_dtype=ssd_compute_dtype,
+                       ssm_chunk=ssm_chunk, serving_layout=serving_layout,
+                       seq_sharded_acts=seq_sharded_acts)
+    cfg = get_tiny(arch) if tiny else get_config(arch)
+    shape = SHAPES[shape_id]
+    model = Model(cfg, rules)
+
+    t0 = time.perf_counter()
+    fn, args, step_kind = build_lowerable(model, shape, tiny=tiny)
+    lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+
+    # loop-aware analytic cost (XLA cost_analysis counts scan bodies once —
+    # see repro.roofline.jaxpr_cost)
+    ana = analytic_cost(fn, *args)
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "peak_memory_in_bytes"):
+            mem[k] = getattr(ma, k, 0)
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo, default_trips=cfg.num_layers)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    # corrected per-device cost: analytic flops / chips; XLA's fusion-aware
+    # bytes scaled by the same loop-correction factor
+    xla_flops = float(cost.get("flops", 0.0) or 0.0)
+    xla_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    flops_dev = ana["flops"] / chips
+    factor = max(1.0, flops_dev / xla_flops) if xla_flops else 1.0
+    cost_corrected = {"flops": flops_dev,
+                      "bytes accessed": xla_bytes * factor}
+
+    report = analyze(
+        arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+        step_kind=step_kind, cost=cost_corrected,
+        collectives=coll, cfg=cfg,
+        memory_per_device=mem.get("peak_memory_in_bytes"))
+
+    out = {
+        "arch": arch, "shape": shape_id, "mesh": mesh_name, "chips": chips,
+        "step_kind": step_kind, "tiny": tiny, "tag": tag,
+        "moe_sharding": moe_sharding, "remat": remat,
+        "q_chunk": q_chunk, "k_chunk": k_chunk,
+        "skip_masked_blocks": skip_masked_blocks,
+        "param_gather_dtype": param_gather_dtype,
+        "ssd_compute_dtype": ssd_compute_dtype, "ssm_chunk": ssm_chunk,
+        "serving_layout": serving_layout,
+        "seq_sharded_acts": seq_sharded_acts,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost_corrected,
+        "cost_xla_raw": {k: cost.get(k) for k in
+                         ("flops", "bytes accessed")},
+        "cost_analytic_global": ana,
+        "loop_correction_factor": factor,
+        "collectives": coll,
+        "roofline": report.to_json(),
+    }
+    if verbose:
+        gb = mem.get("peak_memory_in_bytes", 0) / 2**30
+        print(f"[dryrun] {arch:<20} {shape_id:<12} {mesh_name:<8} "
+              f"{step_kind:<7} compile {t_compile:6.1f}s  peak {gb:7.2f} "
+              f"GiB/dev  compute {report.compute_s:.4f}s  "
+              f"memory {report.memory_s:.4f}s  "
+              f"collective {report.collective_s:.4f}s  "
+              f"-> {report.bottleneck}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-sharding", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced configs/shapes (harness self-test)")
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--k-chunk", type=int, default=1024)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-skip-masked", action="store_true")
+    ap.add_argument("--param-gather-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ssd-compute-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--seq-sharded-acts", action="store_true",
+                    help="Megatron-style sequence parallelism for "
+                         "activations between layers")
+    ap.add_argument("--serving-layout", action="store_true",
+                    help="decode-only pure-TP param layout (no FSDP "
+                         "gathers per token)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    todo = []
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    if args.all:
+        for mp in meshes:
+            todo += [(a, s, mp) for a, s in combos()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape, mp) for mp in meshes]
+
+    results, failures = [], []
+    for arch, shape_id, mp in todo:
+        try:
+            res = run_one(arch, shape_id, multi_pod=mp,
+                          moe_sharding=args.moe_sharding, tiny=args.tiny,
+                          q_chunk=args.q_chunk, k_chunk=args.k_chunk,
+                          remat=not args.no_remat,
+                          skip_masked_blocks=not args.no_skip_masked,
+                          param_gather_dtype=args.param_gather_dtype,
+                          ssd_compute_dtype=args.ssd_compute_dtype,
+                          ssm_chunk=args.ssm_chunk,
+                          serving_layout=args.serving_layout,
+                          seq_sharded_acts=args.seq_sharded_acts,
+                          tag=args.tag,
+                          save_hlo=args.save_hlo)
+            results.append(res)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape_id, mp, repr(e)))
+
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    for f in failures:
+        print("FAILED:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Serving driver: BootSeer-managed startup, then a batched serving session
+with the ServeEngine (prefill + decode over a shared cache).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
+        --requests 6 --new-tokens 16 --workdir /tmp/bootseer_serve
+
+Like the training driver, restarts are warm: the image hot-block record and
+env cache survive in the workdir, so a second invocation starts faster —
+the paper's many-short-jobs workload (§4, "feature testing" jobs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.blockstore.registry import Registry
+from repro.configs import ARCHS, get_tiny
+from repro.core.bootseer import BootseerRuntime, JobSpec
+from repro.core.stages import Stage
+from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+from repro.launch.train import ensure_image
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+from repro.sharding.rules import single_device_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m", choices=list(ARCHS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--workdir", default="/tmp/bootseer_serve")
+    ap.add_argument("--no-bootseer", action="store_true")
+    args = ap.parse_args()
+
+    root = Path(args.workdir)
+    root.mkdir(parents=True, exist_ok=True)
+    reg = Registry(root / "registry", throttle=ThrottleModel(
+        bandwidth=3e7, per_stream=2e6, timescale=1.0))
+    ensure_image(root, reg)
+    hdfs = HdfsCluster(root / "hdfs", num_groups=8, block_size=1 << 20)
+
+    spec = JobSpec(
+        job_id=f"serve-{args.arch}", image="train-image",
+        num_nodes=args.nodes,
+        job_params={"arch": args.arch, "mode": "serve"},
+        startup_reads=[("bin/python", 0, -1), ("libframework.so", 0, -1)],
+        env_setup=lambda t, r: (time.sleep(0.08),
+                                (t / "serving_deps.py").write_text("x")))
+    rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=root / "rt",
+                         optimize=not args.no_bootseer)
+    res = rt.run_startup(spec)
+    for st in (Stage.IMAGE_LOAD, Stage.ENV_SETUP):
+        mx = max(d.get(st.value, 0) for d in res.node_stage_s.values())
+        print(f"startup {st.value:<12} {mx:6.2f}s")
+    print(f"startup TOTAL        {res.total_s:6.2f}s "
+          f"({'warm' if res.notes.get('prefetch_used') else 'cold'})")
+
+    cfg = get_tiny(args.arch)
+    model = Model(cfg, single_device_rules())
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, batch=args.batch,
+                         cache_len=args.cache_len)
+
+    rng = np.random.default_rng(0)
+    todo = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 12)).astype(np.int32),
+                    max_new_tokens=args.new_tokens,
+                    temperature=0.7 if i % 2 else 0.0)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done = 0
+    while todo:
+        batch_reqs = todo[:args.batch]
+        todo = todo[args.batch:]
+        out = engine.generate(batch_reqs)
+        for r in out[:len(batch_reqs)]:
+            done += len(r.generated)
+    dt = time.perf_counter() - t0
+    print(f"served {args.requests} requests, {done} tokens "
+          f"in {dt:.2f}s ({done / dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

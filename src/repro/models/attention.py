@@ -1,0 +1,227 @@
+"""Grouped-query attention with chunked online softmax (flash-style in pure
+jnp — this is what the distributed path lowers; the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU target validated against the same
+oracle).
+
+Supports:
+  * full causal attention (train / prefill) without materializing S x S —
+    query-chunked scan with an online-softmax inner scan over KV chunks;
+  * sliding-window attention (Mixtral / Zamba2 shared block);
+  * single-token decode against a KV cache with per-slot absolute positions
+    (one layout for both full and rolling/sliding-window caches);
+  * M-RoPE 3-D positions (Qwen2-VL).
+
+Conventions:
+  q: [B, S, Hq, Dh]; k/v: [B, S, Hkv, Dh], Hq = G * Hkv (GQA groups G).
+  KV cache per layer: {"k": [B, W, Hkv, Dh], "v": same,
+                       "slot_pos": [W] int32 absolute position per slot
+                       (-1 = empty)}, where W = max_len (full) or window (SWA).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_query(q: jax.Array, num_kv_heads: int) -> jax.Array:
+    """[B, S, Hq, Dh] -> [B, S, Hkv, G, Dh] without copying kv."""
+    b, s, hq, dh = q.shape
+    g = hq // num_kv_heads
+    return q.reshape(b, s, num_kv_heads, g, dh)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """Additive mask bias [Sq, Sk]: 0 where attendable, NEG_INF otherwise.
+
+    Causal (q_pos >= k_pos), optional sliding window (k_pos > q_pos - window),
+    and k slot validity (k_pos >= 0, used for cache slots).
+    """
+    ok = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] >= 0)
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    skip_masked_blocks: bool = True,
+) -> jax.Array:
+    """Causal GQA attention via chunked online softmax.
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Sk, Hkv, Dh]; q_pos: [Sq]; k_pos: [Sk].
+    Returns [B, Sq, Hq, Dh].  Peak memory ~ B * Hq * q_chunk * k_chunk.
+
+    ``skip_masked_blocks``: wrap the inner block computation in a
+    ``lax.cond`` keyed on block-level reachability (causality + window), so
+    fully-masked KV blocks skip the two matmuls at runtime.  For causal
+    attention this halves effective FLOPs; for sliding-window prefill it makes
+    cost O(S*window) instead of O(S^2).
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad to multiples (assigned shapes are powers of two; this is for tests)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_k = nk * k_chunk - sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-(10 ** 9))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-1)
+
+    qg = _group_query(q, hkv)  # [B, Sq, Hkv, G, Dh]
+    qg = qg.reshape(b, nq, q_chunk, hkv, g, dh)
+    kc = k.reshape(b, nk, k_chunk, hkv, dh)
+    vc = v.reshape(b, nk, k_chunk, hkv, dh)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = k_pos.reshape(nk, k_chunk)
+
+    def q_block(qi, q_blk, qp_blk):
+        # online softmax over kv chunks
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        q_blk32 = q_blk.astype(jnp.float32)
+
+        qp_max = jnp.max(qp_blk)
+        qp_min = jnp.min(jnp.where(qp_blk < -(10 ** 8), qp_max, qp_blk))
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kp_blk = inp
+
+            def compute(_):
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk32,
+                               k_blk.astype(jnp.float32)) * scale
+                s = s + _mask_bias(qp_blk, kp_blk, window)[None, None, None]
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            if skip_masked_blocks:
+                kp_min = jnp.min(jnp.where(kp_blk < 0, 10 ** 9, kp_blk))
+                kp_max = jnp.max(kp_blk)
+                reachable = kp_min <= qp_max  # some k is causally visible
+                if window > 0:
+                    reachable &= kp_max > (qp_min - window)
+                m2, l2, a2 = jax.lax.cond(
+                    reachable, compute, lambda _: (m, l, acc), operand=None)
+            else:
+                m2, l2, a2 = compute(None)
+            return (m2, l2, a2), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # [B, Hkv, G, qc, Dh] -> [B, qc, Hkv*G, Dh]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, dh)
+
+    outs = jax.lax.map(
+        lambda i: q_block(i, qg[:, i], qp[i]), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, hq, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    q_abs_pos: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """One-token decode: q [B, 1, Hq, Dh] against cache [B, W, Hkv, Dh].
+
+    slot_pos: [W] absolute positions per slot (-1 empty); q_abs_pos: scalar.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    ok = (slot_pos >= 0) & (slot_pos <= q_abs_pos)
+    if window > 0:
+        ok &= slot_pos > (q_abs_pos - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache helpers
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "slot_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def cache_prefill(cache: dict, k: jax.Array, v: jax.Array,
+                  positions: jax.Array) -> dict:
+    """Write a full prefill [B, S, ...] into the cache.
+
+    For a rolling (window) cache with S > W, keeps the last W entries.
+    """
+    w = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= w:
+        k_in, v_in, p_in = k[:, -w:], v[:, -w:], positions[-w:]
+        slots = p_in % w
+    else:
+        k_in, v_in, p_in = k, v, positions
+        slots = positions % w
+    new_k = cache["k"].at[:, slots].set(k_in.astype(cache["k"].dtype))
+    new_v = cache["v"].at[:, slots].set(v_in.astype(cache["v"].dtype))
+    new_pos = cache["slot_pos"].at[slots].set(p_in.astype(jnp.int32))
+    return {"k": new_k, "v": new_v, "slot_pos": new_pos}
+
+
+def cache_append(cache: dict, k: jax.Array, v: jax.Array,
+                 pos: jax.Array) -> dict:
+    """Append one token (k/v: [B, 1, Hkv, Dh]) at absolute position ``pos``."""
+    w = cache["k"].shape[1]
+    slot = pos % w
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    return {"k": new_k, "v": new_v, "slot_pos": new_pos}

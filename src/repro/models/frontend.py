@@ -1,0 +1,41 @@
+"""Modality frontend stubs (the one sanctioned carve-out).
+
+``musicgen-large`` consumes EnCodec frame embeddings; ``qwen2-vl-72b``
+consumes ViT patch embeddings + 3-D M-RoPE position ids.  The frontends
+themselves (conv codec / vision tower) are NOT implemented — these helpers
+produce correctly-shaped stand-ins (ShapeDtypeStructs for the dry-run,
+random arrays for smoke tests), and the language/decoder backbone that
+consumes them is fully implemented.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def needs_embeddings(cfg: ModelConfig) -> bool:
+    return cfg.arch_type in ("vlm", "audio")
+
+
+def embedding_spec(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def mrope_pos_spec(cfg: ModelConfig, batch: int,
+                   seq: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+
+
+def fake_embeddings(cfg: ModelConfig, batch: int, seq: int, key=None):
+    key = key if key is not None else jax.random.key(0)
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+
+
+def fake_mrope_pos(cfg: ModelConfig, batch: int, seq: int):
+    """Text-like default: all three streams share the token index."""
+    pos = jnp.arange(seq, dtype=jnp.int32)
+    return jnp.broadcast_to(pos[None, :, None], (batch, seq, 3))

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state space duality, arXiv:2405.21060) block in pure JAX.
+
+The chunked SSD algorithm: within a chunk the recurrence is computed as a
+(masked, decay-weighted) quadratic attention-like product; across chunks a
+small ``lax.scan`` carries the [H, P, N] state.  This is the formulation the
+distributed path lowers; ``repro.kernels.ssd`` is the Pallas TPU kernel for
+the intra-chunk part, validated against ``ssd_reference`` (naive recurrence).
+
+Shapes:
+  x   [B, S, H, P]   (P = head_dim)
+  dt  [B, S, H]      (post softplus, > 0)
+  A   [H]            (negative reals: -exp(A_log))
+  B,C [B, S, G, N]   (G groups share B/C across H//G heads)
+  state [B, H, P, N]
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(dA: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} dA[..., k], i >= j.
+
+    dA: [..., L]; returns [..., L, L] (lower-triangular; -inf above diag).
+    """
+    l = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i} when i>=j
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                return_state: bool = False,
+                compute_dtype=jnp.float32):
+    """Chunked SSD scan.  Returns y [B, S, H, P] (and final state).
+
+    ``compute_dtype``: dtype for the intra-chunk einsums (§Perf knob —
+    bf16 halves the dominant [L, L] intermediate traffic; the decay
+    cumsum/exp and the inter-chunk state stay fp32).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    f32 = jnp.float32
+    cd = compute_dtype
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(f32)
+    A32 = A.astype(f32)
+
+    dA = dtc * A32  # [b, nc, l, h]
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    xdt = xc * dtc[..., None]  # [b, nc, l, h, p]
+
+    # ---- intra-chunk (diagonal blocks) ----
+    # scores[b,c,i,j,g] = C_i . B_j ; decay via segsum of dA per head
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cc.astype(cd), Bc.astype(cd))
+    L = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))  # [b, nc, h, i, j]
+    Lh = L.reshape(b, nc, g, hg, chunk, chunk)
+    y_diag = jnp.einsum("bcijg,bcghij,bcjghp->bcighp",
+                        scores.astype(cd), Lh.astype(cd),
+                        xdt.reshape(b, nc, chunk, g, hg, p).astype(cd))
+    y_diag = y_diag.reshape(b, nc, chunk, h, p).astype(f32)
+
+    # ---- per-chunk end states ----
+    # decay from step j to end of chunk: exp(cs_last - cs_j)
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [b, nc, l, h]
+    states = jnp.einsum("bclgn,bclgh,bclghp->bcghpn",
+                        Bc,
+                        dec_end.reshape(b, nc, chunk, g, hg),
+                        xdt.reshape(b, nc, chunk, g, hg, p))
+    states = states.reshape(b, nc, h, p, n)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # [b, nc, h]
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((b, h, p, n), f32))
+
+    def step(carry, inp):
+        st_in, dec = inp  # [b,h,p,n], [b,h]
+        prev = carry
+        new = prev * dec[..., None, None] + st_in
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)  # [b, nc, h, p, n]
+
+    # ---- inter-chunk contribution ----
+    dec_in = jnp.exp(cs)  # decay from chunk start to step i
+    y_off = jnp.einsum(
+        "bcign,bcghpn,bcigh->bcighp",
+        Cc,
+        prev_states.reshape(b, nc, g, hg, p, n),
+        dec_in.reshape(b, nc, chunk, g, hg))
+    y_off = y_off.reshape(b, nc, chunk, h, p)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    y = y + x[:, :s].astype(f32) * D.astype(f32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array, D: jax.Array):
+    """Single-token recurrent update.
+
+    state [B, H, P, N]; x [B, H, P]; dt [B, H]; B/C [B, G, N].
+    Returns (y [B, H, P], new_state).
+    """
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    hg = h // g
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))  # [B, H]
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]  # [B, H, P]
+    upd = jnp.einsum("bgn,bghp->bghpn",
+                     B.astype(f32),
+                     xdt.reshape(b, g, hg, p)).reshape(b, h, p, n)
+    new_state = state.astype(f32) * dA[..., None, None] + upd
+    y = jnp.einsum("bgn,bghpn->bghp", C.astype(f32),
+                   new_state.reshape(b, g, hg, p, n)).reshape(b, h, p)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, D, init_state=None):
+    """Naive step-by-step recurrence oracle (fp32)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    state = (init_state.astype(jnp.float32) if init_state is not None
+             else jnp.zeros((b, h, p, n), jnp.float32))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(
+            state, x[:, t].astype(jnp.float32), dt[:, t], A,
+            B[:, t], C[:, t], D)
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width w) over the sequence
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                init_state: Optional[jax.Array] = None):
+    """x [B, S, Ch]; w [W, Ch]; b [Ch].  Returns (y [B, S, Ch], tail state).
+
+    ``init_state`` is the previous (W-1) inputs [B, W-1, Ch] (decode/prefill
+    continuation); the returned state is the last (W-1) inputs.
+    """
+    width = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    y = y + b.astype(x.dtype)
+    tail = xp[:, -(width - 1):] if width > 1 else init_state
+    return jax.nn.silu(y), tail
+
+
+def conv_decode_step(conv_state: jax.Array, x: jax.Array, w: jax.Array,
+                     b: jax.Array):
+    """One-token conv update.  conv_state [B, W-1, Ch]; x [B, Ch]."""
+    width = w.shape[0]
+    full = jnp.concatenate([conv_state, x[:, None]], axis=1)  # [B, W, Ch]
+    y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    new_state = full[:, 1:] if width > 1 else conv_state
+    return jax.nn.silu(y).astype(x.dtype), new_state.astype(conv_state.dtype)

@@ -1,0 +1,25 @@
+"""LR schedules: cosine-with-warmup and WSD (warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor_frac * peak_lr + (1 - floor_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, floor_frac: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+    dec = peak_lr * (1 - (1 - floor_frac) * prog)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < warmup + stable, peak_lr, dec))

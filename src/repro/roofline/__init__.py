@@ -1,0 +1,2 @@
+from repro.roofline.hlo import collective_bytes_from_hlo  # noqa: F401
+from repro.roofline.analysis import RooflineReport, analyze  # noqa: F401

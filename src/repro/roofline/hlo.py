@@ -1,0 +1,179 @@
+"""Extract collective-communication byte counts from (post-SPMD) HLO text.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module.  Two subtleties make this more than a grep:
+
+1. **Loops.** Our models scan over layers, so the collectives of one layer
+   appear ONCE in the HLO but execute ``num_layers`` times.  We therefore
+   build the computation call graph (while bodies/conditions, to_apply,
+   conditional branches) and weight each computation by its execution count.
+   XLA annotates most scan loops with ``known_trip_count={n}``; when absent
+   we fall back to a caller-supplied default (the scan length).
+
+2. **Byte accounting** (per device, ring-algorithm convention):
+     all-gather        : output - input bytes   (received)
+     reduce-scatter    : input - output bytes   (sent away)
+     all-reduce        : 2 x input bytes (two ring passes)
+     all-to-all        : input bytes
+     collective-permute: input bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.+?)\}\s*[,)]")
+_CALL_RE = re.compile(
+    r"(?:body|condition|to_apply|branch_computations=\{)[=\s]*%?([\w.\-]+)")
+# matches both HLO-attr style (known_trip_count={n=5}) and backend_config
+# JSON style ("known_trip_count":{"n":"5"})
+_TRIP_RE = re.compile(
+    r"known_trip_count\"?\s*[=:]\s*\{\s*\"?n\"?\s*[=:]\s*\"?(\d+)")
+_WHILE_RE = re.compile(r"\bwhile\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """{computation_name: lines}.  ENTRY computation gets key '__entry__'."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(stripped) if stripped.endswith("{") else None
+        if m and "=" not in stripped.split("(")[0]:
+            cur = "__entry__" if m.group(1) else m.group(2)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:  # replica_groups=[num_groups, group_size]<=...
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # replica_groups={{a,b,...}, ...}
+        return max(len(m.group(1).split(",")), 1)
+    if _PAIRS_RE.search(line):  # collective-permute
+        return 2
+    return 2
+
+
+def _collective_bytes_in(lines: list[str]):
+    """Per-device payload bytes.  CPU HLO prints operands as bare names, so
+    payloads derive from the OUTPUT shape and the replica group size g:
+      all-gather:      received = out * (g-1)/g
+      reduce-scatter:  sent     = out * (g-1)        (out = in/g)
+      all-reduce:      2 * out * (g-1)/g             (reduce+broadcast rings)
+      all-to-all:      out * (g-1)/g
+      collective-permute: out
+    """
+    by_op: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        out_b = _shape_bytes(out_shape)
+        g = _group_size(line)
+        if op == "all-gather":
+            moved = out_b * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = out_b * (g - 1)
+        elif op == "all-reduce":
+            moved = 2 * out_b * (g - 1) / g
+        elif op == "all-to-all":
+            moved = out_b * (g - 1) / g
+        else:  # collective-permute
+            moved = out_b
+        by_op[op] += moved
+        count[op] += 1
+    return by_op, count
+
+
+def _call_edges(lines: list[str], default_trips: int):
+    """[(callee, multiplier)] for one computation's instructions."""
+    edges = []
+    for line in lines:
+        is_while = bool(_WHILE_RE.search(line))
+        trips = 1
+        if is_while:
+            tm = _TRIP_RE.search(line)
+            trips = int(tm.group(1)) if tm else default_trips
+        for callee in _CALL_RE.findall(line):
+            edges.append((callee, trips if is_while else 1))
+    return edges
+
+
+def collective_bytes_from_hlo(hlo_text: str, *,
+                              default_trips: int = 1) -> dict:
+    """Weighted per-device collective payload bytes for one execution of the
+    compiled module.  ``default_trips``: trip count assumed for while loops
+    without a ``known_trip_count`` annotation (pass the scan length)."""
+    comps = _split_computations(hlo_text)
+    local = {name: _collective_bytes_in(lines)
+             for name, lines in comps.items()}
+    edges = {name: _call_edges(lines, default_trips)
+             for name, lines in comps.items()}
+
+    # accumulate execution multiplicity from the entry point
+    mult: dict[str, float] = defaultdict(float)
+    mult["__entry__"] = 1.0
+    order = ["__entry__"]
+    seen = {"__entry__"}
+    # BFS (HLO call graphs are DAGs)
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        for callee, k in edges.get(name, []):
+            if callee in comps:
+                mult[callee] += mult[name] * k
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    by_op: dict[str, float] = defaultdict(float)
+    count: dict[str, float] = defaultdict(float)
+    for name, (b, c) in local.items():
+        w = mult.get(name, 0.0)
+        if w == 0:
+            continue
+        for op, v in b.items():
+            by_op[op] += v * w
+        for op, v in c.items():
+            count[op] += v * w
+    return {"total": float(sum(by_op.values())), "by_op": dict(by_op),
+            "count": {k: int(v) for k, v in count.items()}}

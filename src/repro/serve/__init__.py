@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.step import jit_prefill, jit_decode_step  # noqa: F401

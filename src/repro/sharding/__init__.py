@@ -1,0 +1,1 @@
+from repro.sharding.rules import Rules  # noqa: F401

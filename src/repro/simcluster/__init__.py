@@ -1,0 +1,3 @@
+from repro.simcluster.resources import FluidResource, Transfer, simulate_stage  # noqa: F401
+from repro.simcluster.workload import StartupWorkload, ClusterParams  # noqa: F401
+from repro.simcluster.trace import generate_cluster_trace  # noqa: F401

@@ -1,0 +1,119 @@
+"""Deterministic fluid (processor-sharing) simulation of shared resources.
+
+A ``FluidResource`` is a contended source (container registry, SCM package
+host, HDFS cluster) with aggregate capacity, a per-client rate cap, and the
+rate-limiting behaviour observed in §3.4: beyond ``throttle_after``
+concurrent clients the source throttles to ``capacity / throttle_factor``.
+
+``simulate_stage`` runs max-min fair sharing exactly: on every arrival or
+completion the per-transfer rates are recomputed; between events transfers
+progress linearly.  This reproduces the emergent contention shapes (long
+tails, scale-dependent slowdown) without wall-clock sleeps.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class FluidResource:
+    name: str
+    capacity: float                  # aggregate bytes/s
+    per_client: float                # per-transfer cap (NIC / stream limit)
+    throttle_after: int = 1 << 30    # concurrent clients before rate limit
+    throttle_factor: float = 1.0     # capacity divisor once throttled
+
+
+@dataclass
+class Transfer:
+    node: str
+    resource: FluidResource
+    nbytes: float
+    start: float = 0.0               # local work before the transfer begins
+    # p2p scaling: effective capacity grows by this many bytes/s per
+    # *completed* peer (peers that already hold the data serve others)
+    p2p_bonus_per_done: float = 0.0
+
+
+def _rates(active: list[Transfer], done_count: dict) -> dict[int, float]:
+    """Max-min fair allocation per resource (equal split, per-client cap)."""
+    by_res: dict[str, list[Transfer]] = {}
+    for t in active:
+        by_res.setdefault(t.resource.name, []).append(t)
+    rates: dict[int, float] = {}
+    for rname, ts in by_res.items():
+        res = ts[0].resource
+        cap = res.capacity
+        avg_bonus = sum(t.p2p_bonus_per_done for t in ts) / max(len(ts), 1)
+        cap += avg_bonus * done_count.get(rname, 0)
+        n = len(ts)
+        if n > res.throttle_after:
+            cap /= res.throttle_factor
+        share = cap / n
+        for t in ts:
+            rates[id(t)] = min(res.per_client, share)
+    return rates
+
+
+def simulate_stage(transfers: list[Transfer],
+                   extra_work: Optional[dict[str, float]] = None
+                   ) -> dict[str, float]:
+    """Simulate one startup stage.
+
+    Every transfer starts at its ``start`` offset (local pre-work); a node's
+    stage duration = completion of its last transfer + its ``extra_work``.
+    Returns {node: stage_seconds}.  Nodes with no transfers get just their
+    extra_work.
+    """
+    extra_work = extra_work or {}
+    t_now = 0.0
+    remaining = {id(t): float(t.nbytes) for t in transfers}
+    pending = sorted(transfers, key=lambda t: t.start)
+    active: list[Transfer] = []
+    finish: dict[str, float] = {}
+    done_count: dict[str, int] = {}
+
+    def node_done(node, t_end):
+        finish[node] = max(finish.get(node, 0.0), t_end)
+
+    i = 0
+    while pending and pending[0].start <= t_now:
+        active.append(pending.pop(0))
+
+    while active or pending:
+        if not active:
+            t_now = pending[0].start
+            while pending and pending[0].start <= t_now:
+                active.append(pending.pop(0))
+            continue
+        rates = _rates(active, done_count)
+        # time to next completion
+        dt_done = min((remaining[id(t)] / max(rates[id(t)], 1e-12)
+                       for t in active), default=float("inf"))
+        dt_arr = (pending[0].start - t_now) if pending else float("inf")
+        dt = min(dt_done, dt_arr)
+        for t in active:
+            remaining[id(t)] -= rates[id(t)] * dt
+        t_now += dt
+        still = []
+        for t in active:
+            if remaining[id(t)] <= 1e-9:
+                node_done(t.node, t_now)
+                done_count[t.resource.name] = \
+                    done_count.get(t.resource.name, 0) + 1
+            else:
+                still.append(t)
+        active = still
+        while pending and pending[0].start <= t_now + 1e-12:
+            active.append(pending.pop(0))
+
+    out: dict[str, float] = {}
+    nodes = {t.node for t in transfers} | set(extra_work)
+    for node in nodes:
+        base = finish.get(node, 0.0)
+        # transfers with pure local work only (start offset, zero bytes)
+        out[node] = base + extra_work.get(node, 0.0)
+    return out

@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, TrainState  # noqa: F401
+from repro.train.loop import train_loop  # noqa: F401

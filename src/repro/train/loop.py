@@ -1,0 +1,51 @@
+"""Training loop with BootSeer-profiled startup stages and periodic
+checkpointing through the striped DFS (repro.ckpt)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import jit_train_step
+
+
+def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
+               opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+               log_every: int = 10, log_fn: Callable = print,
+               checkpointer=None, ckpt_every: int = 0,
+               params=None, opt_state=None, start_step: int = 0):
+    """Train on the synthetic stream.  Returns (params, opt_state, history)."""
+    from repro.data.loader import ShardedLoader
+    from repro.data.synthetic import SyntheticStream
+
+    opt_cfg = opt_cfg or AdamWConfig()
+    if params is None:
+        params = model.init(jax.random.key(seed))
+    if opt_state is None:
+        opt_state = adamw_init(params)
+
+    step_fn = jit_train_step(model, opt_cfg, batch)
+    loader = ShardedLoader(SyntheticStream(model.cfg.vocab_size, seed),
+                           model.rules, batch, seq_len)
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, start_step + steps):
+        data = loader(step)
+        params, opt_state, metrics = step_fn(params, opt_state, data)
+        if (step - start_step) % log_every == 0 or step == start_step + steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss,
+                            "grad_norm": float(metrics["grad_norm"]),
+                            "t": time.perf_counter() - t0})
+            log_fn(f"step {step:5d}  loss {loss:.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.3f}")
+        if checkpointer is not None and ckpt_every and \
+                (step + 1) % ckpt_every == 0:
+            checkpointer.save(step + 1, params, opt_state)
+    return params, opt_state, history

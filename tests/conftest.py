@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rules():
+    """Single-device (1,1) mesh with the production axis names."""
+    from repro.sharding.rules import single_device_rules
+    return single_device_rules()
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

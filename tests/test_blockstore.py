@@ -1,0 +1,141 @@
+"""Image format, lazy loading, record-and-prefetch, p2p (§4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.blockstore.image import build_image
+from repro.blockstore.lazy import LazyImageClient
+from repro.blockstore.p2p import PeerGroup
+from repro.blockstore.prefetch import HotBlockService, prefetch_image
+from repro.blockstore.registry import Registry
+
+BS = 64 * 1024  # small blocks for fast tests
+
+
+@pytest.fixture()
+def image_env(tmp_path, rng):
+    src = tmp_path / "src"
+    (src / "bin").mkdir(parents=True)
+    files = {
+        "bin/start": rng.integers(0, 256, 3 * BS + 17, dtype=np.uint8
+                                  ).tobytes(),
+        "lib.so": rng.integers(0, 256, 5 * BS, dtype=np.uint8).tobytes(),
+        "data/cold.bin": rng.integers(0, 256, 8 * BS, dtype=np.uint8
+                                      ).tobytes(),
+        "dup.bin": b"\0" * (2 * BS),           # dedups against itself
+        "dup2.bin": b"\0" * (2 * BS),          # and against dup.bin
+    }
+    (src / "data").mkdir()
+    for p, data in files.items():
+        (src / p).write_bytes(data)
+    reg = Registry(tmp_path / "reg")
+    man = build_image(src, reg, "img", block_size=BS)
+    return tmp_path, reg, man, files
+
+
+class TestImageFormat:
+    def test_dedup(self, image_env):
+        _, reg, man, files = image_env
+        # dup.bin and dup2.bin share one zero block
+        zero_blocks = set(man.file_map()["dup.bin"].blocks)
+        assert zero_blocks == set(man.file_map()["dup2.bin"].blocks)
+        assert len(zero_blocks) == 1
+        assert man.total_size == sum(len(d) for d in files.values())
+        assert len(man.unique_blocks) < sum(
+            -(-len(d) // BS) for d in files.values())
+
+    def test_digest_stable(self, image_env):
+        _, reg, man, _ = image_env
+        assert man.digest == man.compute_digest()
+        m2 = reg.get_manifest("img")
+        assert m2.digest == man.digest
+
+    def test_manifest_by_digest(self, image_env):
+        _, reg, man, _ = image_env
+        assert reg.get_manifest(man.digest).name == "img"
+
+
+class TestLazyClient:
+    def test_read_file_correct(self, image_env, tmp_path):
+        _, reg, man, files = image_env
+        c = LazyImageClient(man, reg, tmp_path / "cache")
+        assert c.read_file("bin/start") == files["bin/start"]
+        assert c.read_file("lib.so", 100, 999) == files["lib.so"][100:1099]
+
+    def test_cache_hits_on_second_read(self, image_env, tmp_path):
+        _, reg, man, _ = image_env
+        c = LazyImageClient(man, reg, tmp_path / "cache")
+        c.read_file("lib.so")
+        misses = c.stats["misses"]
+        c.read_file("lib.so")
+        assert c.stats["misses"] == misses
+        assert c.stats["hits"] >= 5
+
+    def test_access_trace_first_touch_order(self, image_env, tmp_path):
+        _, reg, man, _ = image_env
+        c = LazyImageClient(man, reg, tmp_path / "cache")
+        c.read_file("bin/start", 0, 10)
+        c.read_file("lib.so", 0, 10)
+        c.read_file("bin/start", 0, 10)  # repeat: must not re-appear
+        tr = c.access_trace()
+        assert [r["file"] for r in tr] == ["bin/start", "lib.so"]
+
+
+class TestRecordAndPrefetch:
+    def test_prefetch_avoids_registry(self, image_env, tmp_path):
+        _, reg, man, files = image_env
+        svc = HotBlockService(tmp_path / "svc")
+        # record run
+        c0 = LazyImageClient(man, reg, tmp_path / "c0")
+        c0.read_file("bin/start")
+        c0.read_file("lib.so", 0, 2 * BS)
+        svc.record(man.digest, c0.access_trace())
+        assert svc.has_record(man.digest)
+
+        # prefetch run: hot blocks local BEFORE the container reads them
+        c1 = LazyImageClient(man, reg, tmp_path / "c1")
+        prefetch_image(c1, svc, background_cold=False)
+        before = c1.stats["misses"]
+        assert c1.read_file("bin/start") == files["bin/start"]
+        c1.read_file("lib.so", 0, 2 * BS)
+        assert c1.stats["misses"] == before, \
+            "startup reads must be all cache hits after prefetch"
+        # cold streaming completed too (background_cold=False -> blocking)
+        assert c1.cached_fraction() == 1.0
+
+    def test_record_window_cut(self, tmp_path, image_env):
+        _, reg, man, _ = image_env
+        svc = HotBlockService(tmp_path / "svc2")
+        trace = [{"hash": "a", "file": "f", "block": 0, "t": 1.0},
+                 {"hash": "b", "file": "f", "block": 1, "t": 200.0}]
+        svc.record(man.digest, trace, window_s=120.0)
+        assert svc.hot_blocks(man.digest) == ["a"]
+
+
+class TestP2P:
+    def test_peers_serve_blocks(self, image_env, tmp_path):
+        _, reg, man, files = image_env
+        group = PeerGroup()
+        c0 = LazyImageClient(man, reg, tmp_path / "p0", node_id="n0",
+                             peers=group)
+        c0.read_file("lib.so")  # n0 warms up from the registry
+        c1 = LazyImageClient(man, reg, tmp_path / "p1", node_id="n1",
+                             peers=group)
+        assert c1.read_file("lib.so") == files["lib.so"]
+        assert c1.stats["peer_fetches"] > 0
+        assert c1.stats["registry_fetches"] == 0
+        assert group.stats["n0"]["blocks_served"] > 0
+
+    def test_load_spreads_across_peers(self, image_env, tmp_path):
+        _, reg, man, files = image_env
+        group = PeerGroup()
+        warm = [LazyImageClient(man, reg, tmp_path / f"w{i}",
+                                node_id=f"w{i}", peers=group)
+                for i in range(2)]
+        for c in warm:
+            c.read_file("data/cold.bin")
+        fresh = LazyImageClient(man, reg, tmp_path / "fresh",
+                                node_id="fresh", peers=group)
+        fresh.read_file("data/cold.bin")
+        served = [group.stats[f"w{i}"]["blocks_served"] for i in range(2)]
+        assert min(served) > 0, f"one peer did all the work: {served}"

@@ -1,0 +1,89 @@
+"""Pin every assigned architecture config to the assignment table."""
+
+import pytest
+
+from repro.configs import ARCHS, get_config, get_tiny, SHAPES
+
+# (layers, d_model, heads, kv, d_ff, vocab) straight from the brief
+ASSIGNED = {
+    "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50432),  # vocab padded 50280->50432
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+}
+
+MOE = {"moonshot-v1-16b-a3b": (64, 6), "dbrx-132b": (16, 4),
+       "mixtral-8x22b": (8, 2)}
+SSM_STATE = {"zamba2-1.2b": 64, "mamba2-370m": 128}
+ARCH_TYPE = {
+    "yi-34b": "dense", "musicgen-large": "audio",
+    "moonshot-v1-16b-a3b": "moe", "qwen2.5-3b": "dense",
+    "zamba2-1.2b": "hybrid", "qwen1.5-110b": "dense", "dbrx-132b": "moe",
+    "mamba2-370m": "ssm", "qwen2-vl-72b": "vlm", "mixtral-8x22b": "moe"}
+
+
+def test_registry_complete():
+    assert set(ARCHS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_dims(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.arch_type == ARCH_TYPE[arch]
+    assert cfg.source
+    if arch in MOE:
+        assert (cfg.moe.num_experts, cfg.moe.experts_per_token) == MOE[arch]
+    if arch in SSM_STATE:
+        assert cfg.ssm.state_dim == SSM_STATE[arch]
+    if arch == "qwen2-vl-72b":
+        assert cfg.mrope and sum(cfg.mrope_sections) == cfg.head_dim // 2
+    if arch in ("qwen2.5-3b", "qwen1.5-110b", "qwen2-vl-72b"):
+        assert cfg.qkv_bias
+    if arch == "mixtral-8x22b":
+        assert cfg.sliding_window > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_tiny_variants(arch):
+    tiny = get_tiny(arch)
+    assert tiny.num_layers <= 2
+    assert tiny.d_model <= 512
+    if tiny.moe:
+        assert tiny.moe.num_experts <= 4
+    assert tiny.arch_type == ARCH_TYPE[arch]
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_param_counts_plausible():
+    # full-size param counts should be in the right ballpark
+    import math
+    approx = {
+        "yi-34b": 34e9, "qwen1.5-110b": 111e9, "mixtral-8x22b": 140e9,
+        "dbrx-132b": 130e9, "mamba2-370m": 0.37e9,
+    }
+    for arch, target in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * target < n < 1.7 * target, (arch, n, target)

@@ -1,0 +1,128 @@
+"""Unit tests for the userspace DFS: plain layout, striped layout, FUSE."""
+
+import numpy as np
+import pytest
+
+from repro.dfs.fuse import HdfsFuseMount
+from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+from repro.dfs.striped import StripedMeta, StripedReader, write_striped
+
+
+@pytest.fixture()
+def hdfs(tmp_path):
+    return HdfsCluster(tmp_path / "hdfs", num_groups=8, block_size=1 << 20)
+
+
+def _payload(n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, n, dtype=np.uint8).tobytes()
+
+
+class TestPlainLayout:
+    def test_roundtrip_multi_block(self, hdfs):
+        data = _payload(3 * (1 << 20) + 12345)
+        hdfs.write("/a/b", data)
+        assert hdfs.read("/a/b") == data
+        assert hdfs.size("/a/b") == len(data)
+
+    def test_pread_ranges(self, hdfs):
+        data = _payload(2 * (1 << 20) + 7)
+        hdfs.write("/f", data)
+        for off, ln in [(0, 10), ((1 << 20) - 5, 10), (len(data) - 3, 100),
+                        (12345, 1 << 20)]:
+            assert hdfs.pread("/f", off, ln) == data[off:off + ln]
+
+    def test_each_block_lives_in_one_group(self, hdfs):
+        """The original-HDFS property that striping removes."""
+        data = _payload(4 * (1 << 20))
+        hdfs.write("/f", data)
+        meta = hdfs._meta["/f"]
+        assert len(meta.blocks) == 4
+        for b in meta.blocks:
+            assert 0 <= b.group < 8
+
+    def test_delete(self, hdfs):
+        hdfs.write("/x", b"abc")
+        assert hdfs.exists("/x")
+        hdfs.delete("/x")
+        assert not hdfs.exists("/x")
+
+    def test_listdir(self, hdfs):
+        hdfs.write("/d/one", b"1")
+        hdfs.write("/d/two", b"2")
+        hdfs.write("/other", b"3")
+        assert hdfs.listdir("/d") == ["/d/one", "/d/two"]
+
+
+class TestStripedLayout:
+    def test_locate_math(self):
+        m = StripedMeta(size=100 << 20, width=4, chunk=1 << 20,
+                        stripe=4 << 20, files=tuple(
+                            (i, f"f{i}") for i in range(4)))
+        # chunks 0-3 -> file 0 offsets 0..3MB; chunks 4-7 -> file 1 ...
+        assert m.locate(0) == (0, 0)
+        assert m.locate(3) == (0, 3 << 20)
+        assert m.locate(4) == (1, 0)
+        assert m.locate(16) == (0, 4 << 20)  # second stripe unit on file 0
+
+    def test_roundtrip(self, hdfs):
+        data = _payload(10 * (1 << 20) + 777)
+        write_striped(hdfs, "/ck", data, width=4)
+        r = StripedReader(hdfs, "/ck")
+        assert r.read_all() == data
+
+    @pytest.mark.parametrize("off,ln", [
+        (0, 100), ((1 << 20) - 10, 20), (5 * (1 << 20) + 1, 2 * (1 << 20)),
+        (0, 10 * (1 << 20) + 777)])
+    def test_pread(self, hdfs, off, ln):
+        data = _payload(10 * (1 << 20) + 777)
+        write_striped(hdfs, "/ck", data, width=4)
+        r = StripedReader(hdfs, "/ck")
+        assert r.pread(off, ln) == data[off:off + ln]
+
+    def test_stripe_files_in_distinct_groups(self, hdfs):
+        data = _payload(8 << 20)
+        write_striped(hdfs, "/ck", data, width=8)
+        meta = hdfs.attrs("/ck")["striped"]
+        groups = [g for g, _ in meta["files"]]
+        assert len(set(groups)) == 8  # parallel I/O across ALL groups
+
+    def test_metadata_survives_reload(self, hdfs, tmp_path):
+        data = _payload(3 << 20)
+        write_striped(hdfs, "/ck", data, width=4)
+        h2 = HdfsCluster(tmp_path / "hdfs", num_groups=8)
+        assert StripedReader(h2, "/ck").read_all() == data
+
+
+class TestFuse:
+    def test_file_like_semantics(self, hdfs):
+        data = _payload(2 << 20)
+        write_striped(hdfs, "/ck", data, width=4)
+        m = HdfsFuseMount(hdfs)
+        with m.open("/ck") as f:
+            assert len(f) == len(data)
+            f.seek(100)
+            assert f.read(50) == data[100:150]
+            assert f.tell() == 150
+            f.seek(-10, 2)
+            assert f.read() == data[-10:]
+
+    def test_plain_files_too(self, hdfs):
+        hdfs.write("/p", b"hello world")
+        m = HdfsFuseMount(hdfs)
+        assert m.open("/p").read() == b"hello world"
+
+    def test_prefix_mount(self, hdfs):
+        hdfs.write("/envcache/k.bin", b"zz")
+        m = HdfsFuseMount(hdfs, prefix="/envcache")
+        assert m.exists("k.bin")
+        assert m.open("k.bin").read() == b"zz"
+
+
+def test_throttle_model_counts_concurrency():
+    t = ThrottleModel(bandwidth=1e12, timescale=0.0)
+    with t:
+        with t:
+            assert t.max_concurrency == 2
+        t.charge(1000)
+    assert t.served_bytes == 1000

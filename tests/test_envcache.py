@@ -1,0 +1,99 @@
+"""Job-level environment cache (§4.3): snapshot diff, create/restore,
+key-based expiry."""
+
+import time
+
+import pytest
+
+from repro.dfs.fuse import HdfsFuseMount
+from repro.dfs.hdfs import HdfsCluster
+from repro.envcache.snapshot import (EnvCache, diff_snapshots,
+                                     job_cache_key, snapshot_dir)
+
+
+@pytest.fixture()
+def mount(tmp_path):
+    return HdfsFuseMount(HdfsCluster(tmp_path / "h", num_groups=4,
+                                     block_size=1 << 20))
+
+
+def _install(target, tag="v1"):
+    (target / "pkg").mkdir(exist_ok=True)
+    (target / "pkg" / "__init__.py").write_text(f"version = '{tag}'\n")
+    (target / "pkg" / "core.py").write_text("def f():\n    return 42\n")
+    (target / "top.py").write_text("import pkg\n")
+
+
+class TestSnapshots:
+    def test_diff_detects_added_and_modified(self, tmp_path):
+        t = tmp_path / "sp"
+        t.mkdir()
+        (t / "pre.py").write_text("old")
+        before = snapshot_dir(t)
+        time.sleep(0.01)
+        _install(t)
+        (t / "pre.py").write_text("newer")
+        changed = diff_snapshots(before, snapshot_dir(t))
+        assert set(changed) == {"pkg/__init__.py", "pkg/core.py", "top.py",
+                                "pre.py"}
+
+    def test_key_deterministic_and_param_sensitive(self):
+        a = job_cache_key({"deps": ["x==1"], "gpu": "H800"})
+        b = job_cache_key({"gpu": "H800", "deps": ["x==1"]})  # order-free
+        c = job_cache_key({"deps": ["x==2"], "gpu": "H800"})
+        assert a == b
+        assert a != c
+
+
+class TestEnvCache:
+    def test_create_then_restore_skips_install(self, mount, tmp_path):
+        cache = EnvCache(mount)
+        params = {"deps": ["pkg==1.0"]}
+        key = job_cache_key(params)
+
+        t0 = tmp_path / "node0"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        meta = cache.create(key, t0, before, params)
+        assert meta["files"] == 3
+        assert meta["packed_bytes"] > 0
+
+        t1 = tmp_path / "node1"
+        restored = cache.restore(key, t1)
+        assert restored is not None
+        assert (t1 / "pkg" / "core.py").read_text() == \
+            (t0 / "pkg" / "core.py").read_text()
+        assert (t1 / "top.py").exists()
+
+    def test_changed_params_miss(self, mount, tmp_path):
+        cache = EnvCache(mount)
+        t0 = tmp_path / "a"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        cache.create(job_cache_key({"v": 1}), t0, before)
+        assert cache.restore(job_cache_key({"v": 2}), tmp_path / "b") is None
+
+    def test_expire(self, mount, tmp_path):
+        cache = EnvCache(mount)
+        key = job_cache_key({"v": 1})
+        t0 = tmp_path / "a"
+        t0.mkdir()
+        cache.create(key, t0, {})
+        assert cache.exists(key)
+        cache.expire(key)
+        assert not cache.exists(key)
+        assert cache.restore(key, tmp_path / "b") is None
+
+    def test_only_diff_is_packed(self, mount, tmp_path):
+        """Pre-existing files must not bloat the cache archive."""
+        cache = EnvCache(mount)
+        t0 = tmp_path / "a"
+        t0.mkdir()
+        (t0 / "huge_preinstalled.bin").write_bytes(b"x" * 500_000)
+        before = snapshot_dir(t0)
+        (t0 / "small_new.py").write_text("pass")
+        meta = cache.create(job_cache_key({}), t0, before)
+        assert meta["files"] == 1
+        assert meta["raw_bytes"] < 100_000

@@ -1,0 +1,129 @@
+"""Pallas kernel sweeps (deliverable c): shapes x dtypes vs the pure-jnp
+oracles, interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import attention_op, ssd_op
+from repro.kernels.ref import attention_reference, ssd_reference
+from repro.kernels.ssd import ssd_chunked_kernel
+
+
+def _qkv(key, b, hq, hkv, sq, sk, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+        (2, 4, 4, 256, 256, 64),      # MHA
+        (2, 4, 2, 256, 256, 64),      # GQA 2:1
+        (1, 8, 1, 128, 512, 64),      # MQA, rectangular
+        (1, 4, 2, 256, 256, 128),     # head_dim 128 (MXU width)
+        (1, 2, 1, 192, 320, 64),      # non-block-multiple (padding path)
+    ])
+    def test_causal_shapes(self, b, hq, hkv, sq, sk, d):
+        q, k, v = _qkv(jax.random.key(b * sq + d), b, hq, hkv, sq, sk, d,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 64, 100])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(jax.random.key(7), 1, 4, 2, 256, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        ref = attention_reference(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_bf16(self):
+        q, k, v = _qkv(jax.random.key(1), 1, 4, 2, 128, 128, 64,
+                       jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = attention_reference(q, k, v, causal=True)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=3e-2, rtol=3e-2)
+
+    @pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64),
+                                                 (64, 128)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        q, k, v = _qkv(jax.random.key(2), 1, 2, 2, 256, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=block_q,
+                              block_k=block_k, interpret=True)
+        ref = attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_ops_wrapper_layout(self):
+        """ops.attention_op uses the model's [B, S, H, D] layout."""
+        b, s, hq, hkv, d = 2, 128, 4, 2, 64
+        ks = jax.random.split(jax.random.key(3), 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        out = attention_op(q, k, v, interpret=True)
+        ref = attention_reference(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def _ssd_inputs(key, b, s, h, p, g, n, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,), minval=0.0, maxval=1.0))
+    B = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, s, g, n)) * 0.5).astype(dtype)
+    D = jnp.ones((h,))
+    return x, dt, A, B, C, D
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+        (2, 128, 4, 32, 1, 16, 32),
+        (1, 64, 2, 64, 1, 64, 32),     # state 64 (zamba2-like)
+        (1, 128, 4, 64, 1, 128, 64),   # state 128 (mamba2-370m-like)
+        (1, 96, 4, 32, 2, 16, 32),     # grouped B/C
+        (1, 100, 2, 32, 1, 16, 32),    # padding path
+    ])
+    def test_vs_reference(self, b, s, h, p, g, n, chunk):
+        x, dt, A, B, C, D = _ssd_inputs(jax.random.key(s + h), b, s, h, p,
+                                        g, n)
+        y, st = ssd_chunked_kernel(x, dt, A, B, C, D, chunk=chunk,
+                                   interpret=True)
+        y_ref, st_ref = ssd_reference(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_chunk_invariance(self):
+        x, dt, A, B, C, D = _ssd_inputs(jax.random.key(0), 1, 128, 2, 32,
+                                        1, 16)
+        y32, _ = ssd_chunked_kernel(x, dt, A, B, C, D, chunk=32,
+                                    interpret=True)
+        y64, _ = ssd_chunked_kernel(x, dt, A, B, C, D, chunk=64,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(y32), np.asarray(y64),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_ops_wrapper(self):
+        x, dt, A, B, C, D = _ssd_inputs(jax.random.key(9), 1, 64, 2, 32,
+                                        1, 16)
+        y, st = ssd_op(x, dt, A, B, C, D, chunk=32, interpret=True)
+        y_ref, st_ref = ssd_reference(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=5e-4, rtol=5e-4)

@@ -1,0 +1,83 @@
+"""Hypothesis property tests for the MoE dispatch invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import (_dispatch_indices, capacity_for, router_topk)
+
+SET = dict(deadline=None, max_examples=30,
+           suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+class TestDispatchInvariants:
+    @given(t=st.integers(1, 128), e=st.sampled_from([2, 4, 8]),
+           k=st.integers(1, 3), seed=st.integers(0, 1000))
+    @settings(**SET)
+    def test_slots_unique_and_within_capacity(self, t, e, k, seed):
+        k = min(k, e)
+        moe = MoEConfig(e, k)
+        cap = capacity_for(t, moe)
+        rng = np.random.default_rng(seed)
+        idx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+        order, se, st_, pos, keep = _dispatch_indices(idx, t, e, cap)
+        se, st_, pos, keep = map(np.asarray, (se, st_, pos, keep))
+        # kept (expert, slot) pairs are unique -> scatter-add is collision-free
+        dest = se[keep] * cap + pos[keep]
+        assert len(np.unique(dest)) == len(dest)
+        # every kept slot is within capacity
+        assert (pos[keep] < cap).all() and (pos[keep] >= 0).all()
+        # sorted-by-expert property
+        assert (np.diff(se) >= 0).all()
+        # each (token, k) assignment appears exactly once overall
+        assert len(se) == t * k
+
+    @given(t=st.integers(2, 64), seed=st.integers(0, 1000))
+    @settings(**SET)
+    def test_no_drops_when_capacity_ample(self, t, seed):
+        e, k = 4, 2
+        moe = MoEConfig(e, k, capacity_factor=float(e))  # cap >= t
+        cap = capacity_for(t, moe)
+        rng = np.random.default_rng(seed)
+        idx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+        _, _, _, pos, keep = _dispatch_indices(idx, t, e, cap)
+        assert np.asarray(keep).all(), "ample capacity must keep all tokens"
+
+    @given(t=st.integers(1, 64), seed=st.integers(0, 1000))
+    @settings(**SET)
+    def test_router_gates_normalized(self, t, seed):
+        d, e, k = 8, 4, 2
+        ks = jax.random.split(jax.random.key(seed), 2)
+        x = jax.random.normal(ks[0], (t, d))
+        rw = jax.random.normal(ks[1], (d, e))
+        probs, gate, idx = router_topk(x, rw, k)
+        np.testing.assert_allclose(np.asarray(gate.sum(-1)), 1.0, atol=1e-5)
+        assert (np.asarray(gate) >= 0).all()
+        # top-k indices really are the argmax set
+        p = np.asarray(probs)
+        for ti in range(t):
+            top = set(np.argsort(p[ti])[-k:])
+            assert set(np.asarray(idx)[ti]) == top
+
+
+class TestReportCli:
+    def test_report_renders(self, tmp_path, capsys):
+        from repro.core.profiler import StageAnalysisService, StageLogger
+        from repro.core.report import main, render_all
+        from repro.core.stages import Stage
+        svc = StageAnalysisService()
+        for n in range(3):
+            log = StageLogger("jobZ", f"n{n}", clock=lambda: 0.0)
+            log.begin(Stage.ENV_SETUP, ts=0.0)
+            log.end(Stage.ENV_SETUP, ts=100.0 + n * 10)
+            log.begin(Stage.TRAINING, ts=120.0)
+            svc.ingest_log(log.lines())
+        out = render_all(svc)
+        assert "jobZ" in out and "env_setup" in out
+        svc.save(tmp_path / "r.json")
+        main([str(tmp_path / "r.json")])
+        assert "env_setup" in capsys.readouterr().out

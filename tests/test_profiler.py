@@ -1,0 +1,112 @@
+"""Profiling system (§4.1): log emission, parsing, stage analytics."""
+
+import math
+
+from repro.core.profiler import (StageAnalysisService, StageLogger,
+                                 parse_log)
+from repro.core.stages import GPU_CONSUMING, STAGE_ORDER, Stage
+from repro.core.straggler import barrier_cost, max_median_ratio, tail_summary
+
+
+def _fake_clock(times):
+    it = iter(times)
+    return lambda: next(it)
+
+
+class TestLoggerAndParser:
+    def test_roundtrip(self):
+        log = StageLogger("jobA", "node0",
+                          clock=_fake_clock([1.0, 3.5, 4.0, 9.0]))
+        with log.stage(Stage.IMAGE_LOAD):
+            pass
+        with log.stage(Stage.ENV_SETUP):
+            pass
+        events = parse_log(log.lines())
+        assert len(events) == 4
+        assert events[0].stage == "image_load" and events[0].ev == "BEGIN"
+        assert events[1].ts == 3.5
+
+    def test_parser_ignores_noise(self):
+        text = ("random print output\n"
+                "BOOTSEER_STAGE ts=2.0 job=j node=n stage=env_setup ev=BEGIN\n"
+                "pip install torch... done\n"
+                "BOOTSEER_STAGE ts=5.0 job=j node=n stage=env_setup ev=END\n")
+        events = parse_log(text)
+        assert len(events) == 2
+
+
+def _service_with_job(durs):
+    """durs: {node: {stage: (begin, end)}}"""
+    svc = StageAnalysisService()
+    for node, stages in durs.items():
+        log = StageLogger("job1", node, clock=lambda: 0.0)
+        for stage, (b, e) in stages.items():
+            log.begin(stage, ts=b)
+            log.end(stage, ts=e)
+        svc.ingest_log(log.lines())
+    return svc
+
+
+class TestAnalysis:
+    def test_node_stage_durations(self):
+        svc = _service_with_job({
+            "n0": {Stage.IMAGE_LOAD: (0, 10), Stage.ENV_SETUP: (10, 110)},
+            "n1": {Stage.IMAGE_LOAD: (0, 30), Stage.ENV_SETUP: (30, 90)},
+        })
+        d = svc.node_stage_durations("job1")
+        assert d["n0"]["image_load"] == 10
+        assert d["n1"]["env_setup"] == 60
+
+    def test_node_vs_job_level(self):
+        """Job-level includes the straggler wait; node-level does not."""
+        svc = _service_with_job({
+            "n0": {Stage.IMAGE_LOAD: (0, 10), Stage.TRAINING: (40, 41)},
+            "n1": {Stage.IMAGE_LOAD: (0, 40), Stage.TRAINING: (40, 41)},
+        })
+        node = svc.node_level_overhead("job1")
+        assert node["n0"] < node["n1"]
+        job = svc.job_level_overhead("job1")
+        assert job == 40.0  # first submit -> last training begin
+
+    def test_max_median_ratio(self):
+        svc = _service_with_job({
+            f"n{i}": {Stage.ENV_SETUP: (0, 60)} for i in range(9)
+        } | {"slow": {Stage.ENV_SETUP: (0, 92)}})
+        r = svc.max_median_ratio("job1", Stage.ENV_SETUP)
+        assert math.isclose(r, 92 / 60)
+
+    def test_stage_stats(self):
+        svc = _service_with_job({
+            "n0": {Stage.MODEL_INIT: (0, 100)},
+            "n1": {Stage.MODEL_INIT: (0, 200)},
+        })
+        st = svc.stage_stats("job1")["model_init"]
+        assert st["min"] == 100 and st["max"] == 200 and st["mean"] == 150
+
+    def test_save_load(self, tmp_path):
+        svc = _service_with_job({"n0": {Stage.IMAGE_LOAD: (0, 5)}})
+        svc.save(tmp_path / "r.json")
+        svc2 = StageAnalysisService.load(tmp_path / "r.json")
+        assert svc2.node_stage_durations("job1")["n0"]["image_load"] == 5
+
+
+class TestStages:
+    def test_order_and_sets(self):
+        assert STAGE_ORDER[0] is Stage.RESOURCE_QUEUE
+        assert STAGE_ORDER[-1] is Stage.TRAINING
+        assert Stage.ENV_SETUP in GPU_CONSUMING
+        assert Stage.RESOURCE_QUEUE not in GPU_CONSUMING
+
+
+class TestStragglerMetrics:
+    def test_tail_summary(self):
+        xs = [60.0] * 99 + [92.0]
+        t = tail_summary(xs)
+        assert t["p50"] == 60 and t["max"] == 92
+        assert 0 < t["tail_fraction_over_1p5x_median"] <= 0.01
+
+    def test_barrier_cost(self):
+        assert barrier_cost([10, 10, 40]) == 60.0
+
+    def test_max_median(self):
+        assert max_median_ratio([1, 1, 4]) == 4.0

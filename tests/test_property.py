@@ -1,0 +1,231 @@
+"""Property-based tests (hypothesis) on system invariants:
+
+* striped layout: any (size, offset, length) roundtrips exactly, and the
+  chunk->file mapping is a bijection;
+* block image: dedup never loses data, any read slice matches the source;
+* env snapshot diff: soundness (every changed file is reported) and
+  precision (unchanged files are not);
+* online softmax (chunked attention): equals naive softmax attention for
+  arbitrary shapes/chunk sizes;
+* fluid simulator: work conservation — total bytes / capacity lower-bounds
+  the makespan; monotonicity in demand;
+* profiler: parse(emit(x)) == x.
+"""
+
+import io
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+SET = dict(deadline=None, max_examples=25,
+           suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+# ---------------------------------------------------------------------------
+# striped layout
+# ---------------------------------------------------------------------------
+
+class TestStripedProperties:
+    @given(size=st.integers(1, 3 * 1024 * 1024),
+           width=st.integers(1, 8),
+           data_seed=st.integers(0, 2 ** 16))
+    @settings(**SET)
+    def test_roundtrip_any_size(self, tmp_path_factory, size, width,
+                                data_seed):
+        from repro.dfs.hdfs import HdfsCluster
+        from repro.dfs.striped import StripedReader, write_striped
+        root = tmp_path_factory.mktemp("h")
+        h = HdfsCluster(root, num_groups=8)
+        data = np.random.default_rng(data_seed).integers(
+            0, 256, size, dtype=np.uint8).tobytes()
+        write_striped(h, "/f", data, width=width, chunk=64 * 1024,
+                      stripe=256 * 1024)
+        assert StripedReader(h, "/f").read_all() == data
+
+    @given(off=st.integers(0, 2 ** 21), ln=st.integers(0, 2 ** 20))
+    @settings(**SET)
+    def test_pread_any_range(self, shared_striped, off, ln):
+        reader, data = shared_striped
+        off = min(off, len(data))
+        assert reader.pread(off, ln) == data[off:off + ln]
+
+    @given(chunk_idx=st.integers(0, 10_000))
+    @settings(**SET)
+    def test_locate_bijective(self, chunk_idx):
+        from repro.dfs.striped import StripedMeta
+        m = StripedMeta(size=1 << 40, width=7, chunk=1 << 20, stripe=4 << 20,
+                        files=tuple((i, f"f{i}") for i in range(7)))
+        f, off = m.locate(chunk_idx)
+        assert 0 <= f < 7 and off % m.chunk == 0
+        # invert: which chunk lives at (f, off)?
+        unit_in_file = off // m.stripe
+        u = unit_in_file * m.width + f
+        ci = u * m.spc + (off % m.stripe) // m.chunk
+        assert ci == chunk_idx
+
+
+@pytest.fixture(scope="session")
+def shared_striped(tmp_path_factory):
+    from repro.dfs.hdfs import HdfsCluster
+    from repro.dfs.striped import StripedReader, write_striped
+    root = tmp_path_factory.mktemp("shared")
+    h = HdfsCluster(root, num_groups=8)
+    data = np.random.default_rng(42).integers(
+        0, 256, 2 * 1024 * 1024 + 333, dtype=np.uint8).tobytes()
+    write_striped(h, "/f", data, width=4, chunk=64 * 1024,
+                  stripe=256 * 1024)
+    return StripedReader(h, "/f"), data
+
+
+# ---------------------------------------------------------------------------
+# block image
+# ---------------------------------------------------------------------------
+
+class TestImageProperties:
+    @given(sizes=st.lists(st.integers(0, 200_000), min_size=1, max_size=5),
+           seed=st.integers(0, 100))
+    @settings(**SET)
+    def test_any_tree_roundtrips(self, tmp_path_factory, sizes, seed):
+        from repro.blockstore.image import build_image
+        from repro.blockstore.lazy import LazyImageClient
+        from repro.blockstore.registry import Registry
+        root = tmp_path_factory.mktemp("img")
+        src = root / "src"
+        src.mkdir()
+        rng = np.random.default_rng(seed)
+        datas = {}
+        for i, n in enumerate(sizes):
+            d = rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+            (src / f"f{i}.bin").write_bytes(d)
+            datas[f"f{i}.bin"] = d
+        reg = Registry(root / "reg")
+        man = build_image(src, reg, "img", block_size=64 * 1024)
+        c = LazyImageClient(man, reg, root / "cache")
+        for name, d in datas.items():
+            assert c.read_file(name) == d
+            if len(d) > 10:
+                o = len(d) // 3
+                assert c.read_file(name, o, 7) == d[o:o + 7]
+
+
+# ---------------------------------------------------------------------------
+# env snapshot diff
+# ---------------------------------------------------------------------------
+
+class TestSnapshotProperties:
+    @given(st.data())
+    @settings(**SET)
+    def test_diff_sound_and_precise(self, tmp_path_factory, data):
+        from repro.envcache.snapshot import diff_snapshots, snapshot_dir
+        root = tmp_path_factory.mktemp("sp")
+        names = [f"m{i}.py" for i in range(6)]
+        keep = data.draw(st.sets(st.sampled_from(names)))
+        change = data.draw(st.sets(st.sampled_from(names)))
+        for n in keep | change:
+            (root / n).write_text("orig")
+        before = snapshot_dir(root)
+        import os
+        for n in change:
+            (root / n).write_text("changed!")
+            os.utime(root / n, ns=(1, 10 ** 15))  # force mtime change
+        add = data.draw(st.sets(st.sampled_from(
+            [f"new{i}.py" for i in range(4)])))
+        for n in add:
+            (root / n).write_text("new")
+        changed = set(diff_snapshots(before, snapshot_dir(root)))
+        assert changed == (change | add)
+
+
+# ---------------------------------------------------------------------------
+# online softmax
+# ---------------------------------------------------------------------------
+
+class TestAttentionProperties:
+    @given(s=st.integers(16, 160), qc=st.sampled_from([16, 32, 64]),
+           kc=st.sampled_from([16, 32, 64]),
+           window=st.sampled_from([0, 24, 51]),
+           seed=st.integers(0, 50))
+    @settings(**SET)
+    def test_chunked_equals_naive(self, s, qc, kc, window, seed):
+        from repro.kernels.ref import attention_reference
+        from repro.models.attention import chunked_attention
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, s, 2, 16))
+        k = jax.random.normal(ks[1], (1, s, 1, 16))
+        v = jax.random.normal(ks[2], (1, s, 1, 16))
+        pos = jnp.arange(s, dtype=jnp.int32)
+        out = chunked_attention(q, k, v, pos, pos, window=window,
+                                q_chunk=qc, k_chunk=kc)
+        ref = attention_reference(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window
+        ).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# fluid simulator
+# ---------------------------------------------------------------------------
+
+class TestFluidProperties:
+    @given(nbytes=st.lists(st.floats(1.0, 1e6), min_size=1, max_size=12),
+           cap=st.floats(10.0, 1e5), per=st.floats(10.0, 1e5))
+    @settings(**SET)
+    def test_work_conservation(self, nbytes, cap, per):
+        from repro.simcluster.resources import (FluidResource, Transfer,
+                                                simulate_stage)
+        r = FluidResource("r", cap, per)
+        out = simulate_stage([Transfer(f"n{i}", r, b)
+                              for i, b in enumerate(nbytes)])
+        makespan = max(out.values())
+        lower = max(sum(nbytes) / cap, max(nbytes) / per)
+        assert makespan >= lower * (1 - 1e-6)
+        # and it's not absurdly loose for equal sharing
+        assert makespan <= sum(nbytes) / min(cap, per) + 1e-6
+
+    @given(extra=st.floats(1.0, 1e6))
+    @settings(**SET)
+    def test_monotone_in_demand(self, extra):
+        from repro.simcluster.resources import (FluidResource, Transfer,
+                                                simulate_stage)
+        r = FluidResource("r", 100.0, 100.0)
+        base = [Transfer(f"n{i}", r, 1000.0) for i in range(3)]
+        small = simulate_stage(base)
+        r2 = FluidResource("r", 100.0, 100.0)
+        more = [Transfer(f"n{i}", r2, 1000.0) for i in range(3)] + \
+            [Transfer("n3", r2, extra)]
+        big = simulate_stage(more)
+        assert big["n0"] >= small["n0"] - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# profiler
+# ---------------------------------------------------------------------------
+
+class TestProfilerProperties:
+    @given(ts=st.lists(st.floats(0, 1e6), min_size=2, max_size=12,
+                       unique=True),
+           job=st.text(alphabet="abcXYZ09_.-", min_size=1, max_size=8),
+           node=st.text(alphabet="abcXYZ09_.-", min_size=1, max_size=8))
+    @settings(**SET)
+    def test_parse_emit_roundtrip(self, ts, job, node):
+        from repro.core.profiler import StageLogger, parse_log
+        ts = sorted(ts)
+        log = StageLogger(job, node, clock=lambda: 0.0)
+        stages = ["image_load", "env_setup", "model_init"]
+        emitted = []
+        for i, t in enumerate(ts):
+            stage = stages[i % 3]
+            ev = "BEGIN" if i % 2 == 0 else "END"
+            (log.begin if ev == "BEGIN" else log.end)(stage, ts=t)
+            emitted.append((t, job, node, stage, ev))
+        parsed = [(e.ts, e.job, e.node, e.stage, e.ev)
+                  for e in parse_log(log.lines())]
+        assert [(round(a, 6), b, c, d, e) for a, b, c, d, e in emitted] == \
+            [(round(a, 6), b, c, d, e) for a, b, c, d, e in parsed]

@@ -1,0 +1,50 @@
+"""Serving layout (§Perf beyond-paper #4): pure-TP params for decode must
+be numerically identical to the FSDP layout — only the sharding changes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.models.model import Model
+from repro.sharding.rules import single_device_rules
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mixtral-8x22b",
+                                  "mamba2-370m"])
+def test_serving_layout_same_logits(arch):
+    cfg = get_tiny(arch)
+    normal = Model(cfg, single_device_rules())
+    serving = Model(cfg, single_device_rules(serving_layout=True))
+    params = normal.init(jax.random.key(0))
+
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab_size)
+    lg_n, cache_n = jax.jit(
+        lambda p, b: normal.prefill(p, b, cache_len=32))(
+            params, {"tokens": toks})
+    lg_s, cache_s = jax.jit(
+        lambda p, b: serving.prefill(p, b, cache_len=32))(
+            params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg_n, np.float32),
+                               np.asarray(lg_s, np.float32), atol=1e-4)
+
+    d_n, _ = jax.jit(normal.decode_step)(params, toks[:, -1:], cache_n,
+                                         jnp.int32(17))
+    d_s, _ = jax.jit(serving.decode_step)(params, toks[:, -1:], cache_s,
+                                          jnp.int32(17))
+    np.testing.assert_allclose(np.asarray(d_n, np.float32),
+                               np.asarray(d_s, np.float32), atol=1e-4)
+
+
+def test_serving_layout_specs_drop_fsdp():
+    r = single_device_rules(serving_layout=True)
+    assert r.dp(64) is None                 # no FSDP / batch replication
+    cfg = get_tiny("qwen2.5-3b")
+    m = Model(cfg, r)
+    specs = jax.tree.leaves(
+        m.param_specs(), is_leaf=lambda x: hasattr(x, "index"))
+    # no spec may reference the data axes alone as an FSDP dim
+    for s in specs:
+        for entry in s:
+            assert entry != ("data",), f"FSDP dim survived: {s}"

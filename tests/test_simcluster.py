@@ -1,0 +1,130 @@
+"""Discrete-event simulator: fluid-sharing exactness, determinism, and the
+paper's §3/§5 claims at scale."""
+
+import numpy as np
+import pytest
+
+from repro.core.stages import Stage
+from repro.simcluster.resources import FluidResource, Transfer, simulate_stage
+from repro.simcluster.trace import generate_cluster_trace, \
+    gpu_time_waste_fraction
+from repro.simcluster.workload import ClusterParams, StartupWorkload
+
+
+class TestFluidSim:
+    def test_single_transfer_exact(self):
+        r = FluidResource("r", capacity=100.0, per_client=10.0)
+        out = simulate_stage([Transfer("n0", r, 50.0)])
+        assert out["n0"] == pytest.approx(5.0)  # per-client bound
+
+    def test_capacity_sharing(self):
+        r = FluidResource("r", capacity=100.0, per_client=1000.0)
+        out = simulate_stage([Transfer(f"n{i}", r, 100.0) for i in range(4)])
+        # 4 clients share 100 B/s -> 25 each -> 4 s
+        for v in out.values():
+            assert v == pytest.approx(4.0)
+
+    def test_early_finisher_frees_bandwidth(self):
+        r = FluidResource("r", capacity=100.0, per_client=1000.0)
+        out = simulate_stage([Transfer("small", r, 50.0),
+                              Transfer("big", r, 150.0)])
+        # both at 50 B/s until t=1 (small done), then big at 100 B/s
+        assert out["small"] == pytest.approx(1.0)
+        assert out["big"] == pytest.approx(2.0)
+
+    def test_throttling_kicks_in(self):
+        fast = simulate_stage([Transfer(f"n{i}", FluidResource(
+            "r", 100.0, 100.0, throttle_after=10), 25.0) for i in range(4)])
+        slow = simulate_stage([Transfer(f"n{i}", FluidResource(
+            "r", 100.0, 100.0, throttle_after=2, throttle_factor=4.0), 25.0)
+            for i in range(4)])
+        assert max(slow.values()) > max(fast.values()) * 2
+
+    def test_start_offsets_and_extra_work(self):
+        r = FluidResource("r", capacity=1e9, per_client=10.0)
+        out = simulate_stage([Transfer("n0", r, 100.0, start=3.0)],
+                             extra_work={"n0": 2.0, "lonely": 7.0})
+        assert out["n0"] == pytest.approx(15.0)  # 3 + 10 + 2
+        assert out["lonely"] == pytest.approx(7.0)
+
+
+class TestWorkload:
+    def test_deterministic(self):
+        a = StartupWorkload(bootseer=True, seed=3).run(8)
+        b = StartupWorkload(bootseer=True, seed=3).run(8)
+        assert a["job_level"] == b["job_level"]
+
+    def test_bootseer_halves_startup(self):
+        """The §5 headline: ~50% reduction across the 16..128 GPU range."""
+        for servers in (2, 4, 8, 16):
+            base = StartupWorkload(bootseer=False, seed=1).run(servers)
+            opt = StartupWorkload(bootseer=True, seed=1).run(servers)
+            ratio = base["job_level"] / opt["job_level"]
+            assert 1.6 < ratio < 3.0, (servers, ratio)
+
+    def test_stage_level_claims(self):
+        """§5.3: image 4-10x, env ~2x, model-init ~1.6x at 128 GPUs."""
+        base = StartupWorkload(bootseer=False, seed=1).run(16)
+        opt = StartupWorkload(bootseer=True, seed=1).run(16)
+
+        def mx(r, s):
+            return max(r["stages"][s.value].values())
+        img = mx(base, Stage.IMAGE_LOAD) / mx(opt, Stage.IMAGE_LOAD)
+        env = mx(base, Stage.ENV_SETUP) / mx(opt, Stage.ENV_SETUP)
+        init = mx(base, Stage.MODEL_INIT) / mx(opt, Stage.MODEL_INIT)
+        assert 3.0 < img < 14.0, img
+        assert 1.5 < env < 3.5, env
+        assert 1.2 < init < 2.2, init
+
+    def test_baseline_env_setup_range_matches_paper(self):
+        """§3.2: Environment Setup 100-300 s; image loading 20-40 s."""
+        base = StartupWorkload(bootseer=False, seed=0).run(8)
+        env = max(base["stages"][Stage.ENV_SETUP.value].values())
+        img = max(base["stages"][Stage.IMAGE_LOAD.value].values())
+        assert 100 < env < 300
+        assert 15 < img < 60
+
+    def test_straggler_ratio_grows_with_scale(self):
+        """§3.3 Fig. 6: Max/Median grows with job scale."""
+        import statistics
+
+        def ratio_at(servers, seeds=range(6)):
+            rs = []
+            for s in seeds:
+                r = StartupWorkload(bootseer=False, seed=s).run(servers)
+                d = list(r["stages"][Stage.ENV_SETUP.value].values())
+                rs.append(max(d) / statistics.median(d))
+            return statistics.fmean(rs)
+        small, large = ratio_at(4), ratio_at(192)
+        assert large > small, (small, large)
+        assert large > 1.3
+
+    def test_bootseer_flattens_stragglers(self):
+        """§5.4 Fig. 14: env-cache eliminates install stragglers."""
+        import statistics
+        base, opt = [], []
+        for s in range(6):
+            rb = StartupWorkload(bootseer=False, seed=s).run(64)
+            ro = StartupWorkload(bootseer=True, seed=s).run(64)
+            db = list(rb["stages"][Stage.ENV_SETUP.value].values())
+            do = list(ro["stages"][Stage.ENV_SETUP.value].values())
+            base.append(max(db) - statistics.median(db))
+            opt.append(max(do) - statistics.median(do))
+        assert statistics.fmean(opt) < statistics.fmean(base)
+
+
+class TestTrace:
+    def test_trace_statistics(self):
+        trace = generate_cluster_trace(150, seed=0)
+        assert len(trace) == 150
+        big = [r for r in trace if r.gpus > 800]
+        small = [r for r in trace if r.gpus <= 100]
+        if big and small:
+            assert np.mean([r.startups for r in big]) > \
+                np.mean([r.startups for r in small])
+
+    def test_waste_fraction_single_digit_percent(self):
+        """Fig. 1: startup overhead ~3.5% of GPU-server-hours."""
+        trace = generate_cluster_trace(200, seed=1)
+        w = gpu_time_waste_fraction(trace)
+        assert 0.005 < w["startup_fraction"] < 0.15

@@ -1,0 +1,120 @@
+"""End-to-end system behaviour: the paper's full lifecycle — submit, cold
+startup (record), train, checkpoint, crash, warm restart (all three
+optimizations active), resume — exercised through the public API with real
+I/O, asserting both the profiler's view and training continuity."""
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blockstore.image import build_image
+from repro.blockstore.registry import Registry
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs import get_tiny
+from repro.core.bootseer import BootseerRuntime, JobSpec
+from repro.core.stages import GPU_CONSUMING, Stage
+from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+from repro.models.model import Model
+from repro.optim.adamw import adamw_init
+from repro.sharding.rules import single_device_rules
+from repro.train.loop import train_loop
+
+BS = 64 * 1024
+
+
+@pytest.fixture()
+def cluster(tmp_path, rng):
+    src = tmp_path / "src"
+    (src / "bin").mkdir(parents=True)
+    (src / "bin" / "python").write_bytes(
+        rng.integers(0, 256, 6 * BS, dtype=np.uint8).tobytes())
+    (src / "cold.tar").write_bytes(
+        rng.integers(0, 256, 16 * BS, dtype=np.uint8).tobytes())
+    reg = Registry(tmp_path / "reg", throttle=ThrottleModel(
+        bandwidth=3e7, per_stream=4e6, timescale=1.0))
+    build_image(src, reg, "img", block_size=BS)
+    hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=8,
+                       block_size=1 << 20)
+    return tmp_path, reg, hdfs
+
+
+def test_full_job_lifecycle(cluster, rules):
+    tmp, reg, hdfs = cluster
+    ck = Checkpointer(hdfs, striped=True, width=8)
+
+    model = Model(get_tiny("qwen2.5-3b"), rules)
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+
+    def env_setup(target, rank):
+        time.sleep(0.05)
+        (target / "dep.py").write_text("installed")
+
+    spec = JobSpec(job_id="lifecycle", image="img", num_nodes=3,
+                   job_params={"deps": ["x==1"]},
+                   startup_reads=[("bin/python", 0, -1)],
+                   env_setup=env_setup)
+
+    rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=tmp / "rt",
+                         optimize=True)
+
+    # --- cold startup + training run 1 ---
+    r1 = rt.run_startup(spec, checkpointer=ck)
+    params, opt, h1 = train_loop(model, batch=4, seq_len=32, steps=12,
+                                 log_every=6, log_fn=lambda *_: None,
+                                 params=params, opt_state=opt)
+    ck.save(12, params, opt)
+    assert h1[-1]["loss"] < h1[0]["loss"]
+
+    # --- "crash" -> warm restart with resume ---
+    spec2 = JobSpec(**{**spec.__dict__, "resume_step": 12,
+                       "shard_fraction": 1 / 3})
+    r2 = rt.run_startup(spec2, checkpointer=ck)
+    assert r2.notes["prefetch_used"]
+
+    # warm env setup must beat the cold one (cache restore vs install)
+    def stage_max(res, st):
+        return max(d.get(st.value, 0) for d in res.node_stage_s.values())
+    assert stage_max(r2, Stage.ENV_SETUP) < stage_max(r1, Stage.ENV_SETUP)
+
+    # every GPU-consuming stage was profiled on every node, both runs
+    for res in (r1, r2):
+        for node_stages in res.node_stage_s.values():
+            for st in GPU_CONSUMING:
+                assert st.value in node_stages
+
+    # --- resume training from the checkpoint ---
+    p2, o2 = ck.restore(12, params, opt)
+    p2 = jax.tree.map(jnp.asarray, p2)
+    o2 = jax.tree.map(jnp.asarray, o2)
+    _, _, h2 = train_loop(model, batch=4, seq_len=32, steps=6, log_every=3,
+                          log_fn=lambda *_: None, params=p2, opt_state=o2,
+                          start_step=12)
+    # resumed loss continues from where run 1 left off, not from scratch
+    assert h2[0]["loss"] < h1[0]["loss"]
+
+    # --- the analysis service saw both startups and can rank stages ---
+    jobs = rt.analysis.jobs()
+    assert len(jobs) == 2
+    stats = rt.analysis.stage_stats(jobs[0])
+    assert Stage.ENV_SETUP.value in stats
+
+
+def test_hot_update_lifecycle(cluster):
+    """§2.2: a Hot Update re-runs env setup + model init only."""
+    tmp, reg, hdfs = cluster
+    rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=tmp / "rt2",
+                         optimize=True)
+    spec = JobSpec(job_id="hot", image="img", num_nodes=2,
+                   job_params={"v": 2},
+                   startup_reads=[("bin/python", 0, -1)],
+                   env_setup=lambda t, r: (t / "d.py").write_text("x"))
+    rt.run_startup(spec)
+    hot = rt.run_hot_update(spec)
+    assert hot.notes["hot_update"]
+    assert all(Stage.IMAGE_LOAD.value not in d
+               for d in hot.node_stage_s.values())
