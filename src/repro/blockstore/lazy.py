@@ -56,9 +56,22 @@ class LazyImageClient:
                 self.stats["peer_fetches"] += 1
                 self._store(h, data)
                 return data
-        data = self.registry.get_block(h)
-        self.stats["registry_fetches"] += 1
-        self._store(h, data)
+            if self.has_block(h):
+                # another thread of THIS client was the fetcher-of-record
+                # while we were parked: the block is already on local disk
+                # (publish clears any in-flight marker we might own)
+                self.peers.publish(h)
+                self.stats["hits"] += 1
+                return self.get_cached_block(h)
+        try:
+            data = self.registry.get_block(h)
+            self.stats["registry_fetches"] += 1
+            self._store(h, data)
+        finally:
+            if self.peers is not None:
+                # we may be the fetcher-of-record: wake coalesced waiters
+                # (on failure too, so they fall back to the registry)
+                self.peers.publish(h)
         return data
 
     def _store(self, h: str, data: bytes):

@@ -51,27 +51,63 @@ class HotBlockService:
 
 def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
                    hot_threads: int = 8, cold_threads: int = 8,
-                   background_cold: bool = True):
+                   background_cold: bool = True,
+                   pool: Optional[ThreadPoolExecutor] = None,
+                   defer_cold: bool = False):
     """Prefetch hot blocks (blocking), then stream cold blocks.
 
-    Returns (hot_seconds, background_thread or None).  After the blocking
-    phase the container can start: every startup-critical block is local.
+    Returns ``(hot_seconds, cold_handle)``.  After the blocking phase the
+    container can start: every startup-critical block is local.
+
+    ``pool``: optional long-lived executor shared across nodes/runs so the
+    per-prefetch thread-spawn cost disappears from the critical path.
+
+    ``defer_cold=True`` keeps the cold remainder ENTIRELY off the startup
+    critical path: nothing is scanned, spawned or fetched here; instead
+    ``cold_handle`` is a callable the caller runs once startup is over (the
+    runtime submits it to its I/O pool while training runs, as in §4.2).
+    Otherwise ``cold_handle`` is the background thread (or None).
     """
     digest = client.manifest.digest
-    hot = service.hot_blocks(digest)
+    hot = [h for h in service.hot_blocks(digest) if not client.has_block(h)]
     t0 = time.perf_counter()
-    if hot:
-        with ThreadPoolExecutor(hot_threads) as ex:
+    if pool is not None:
+        list(pool.map(client.ensure_block, hot))
+    elif len(hot) == 1:
+        client.ensure_block(hot[0])
+    elif hot:
+        # never spawn more threads than blocks — thread creation is pure
+        # overhead for small hot sets
+        with ThreadPoolExecutor(min(hot_threads, len(hot))) as ex:
             list(ex.map(client.ensure_block, hot))
     hot_s = time.perf_counter() - t0
+    hot_set = set(hot)
+
+    if defer_cold:
+        # a marker in the block cache records that a full stream already
+        # completed for this digest, so warm restarts skip the whole
+        # per-block scan (blocks are content-addressed and never evicted)
+        marker = client.cache_dir / f".cold_complete_{digest[:16]}"
+        if marker.exists():
+            return hot_s, None
+
+        def stream_later():
+            for h in client.manifest.unique_blocks:
+                if h not in hot_set and not client.has_block(h):
+                    client.ensure_block(h)
+            marker.touch()
+        return hot_s, stream_later
 
     cold = [h for h in client.manifest.unique_blocks
-            if h not in set(hot) and not client.has_block(h)]
+            if h not in hot_set and not client.has_block(h)]
     bg = None
     if cold:
         def stream():
-            with ThreadPoolExecutor(cold_threads) as ex:
-                list(ex.map(client.ensure_block, cold))
+            if pool is not None:
+                list(pool.map(client.ensure_block, cold))
+            else:
+                with ThreadPoolExecutor(min(cold_threads, len(cold))) as ex:
+                    list(ex.map(client.ensure_block, cold))
         if background_cold:
             bg = threading.Thread(target=stream, daemon=True)
             bg.start()

@@ -71,11 +71,35 @@ class BootseerRuntime:
         self.optimize = optimize
         self.analysis = analysis or StageAnalysisService()
         self.hot_service = HotBlockService(self.workdir / "_hotblocks")
-        self.env_cache = EnvCache(self.mount)
+        # node-local archive cache: N worker threads restoring the same key
+        # cost ONE DFS fetch (singleflight), not N through the shared throttle
+        self.env_cache = EnvCache(
+            self.mount, local_cache=self.workdir / "_envcache_local")
         self.hot_threads = hot_threads
         self.ckpt_threads = ckpt_threads
         self.stripe_width = stripe_width
         self._run_counter: dict[str, int] = {}
+        # one long-lived I/O pool shared by every node's prefetch across
+        # runs: thread-spawn cost is paid once per runtime, and total
+        # concurrency stays bounded instead of scaling with node count
+        self._io_pool = ThreadPoolExecutor(
+            hot_threads, thread_name_prefix="bootseer-io")
+        # cold streaming gets its own (small) pool so a previous run's cold
+        # remainder can never queue ahead of a later run's hot prefetch
+        self._cold_pool = ThreadPoolExecutor(
+            2, thread_name_prefix="bootseer-cold")
+
+    def close(self):
+        """Release the runtime's worker pools (idempotent)."""
+        self._io_pool.shutdown(wait=False)
+        self._cold_pool.shutdown(wait=False)
+        self.env_cache.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------------
     def run_startup(self, spec: JobSpec,
@@ -91,6 +115,9 @@ class BootseerRuntime:
         loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
         t_start = time.perf_counter()
         trace_holder: dict = {}
+        # cold image blocks stream only after the startup critical path
+        deferred_cold: list = []
+        deferred_lock = threading.Lock()
 
         def node_main(rank: int):
             log = loggers[rank]
@@ -99,15 +126,23 @@ class BootseerRuntime:
 
             # ---- Image Loading ----
             log.begin(Stage.IMAGE_LOAD)
+            # the block cache is per JOB+NODE, not per run: image blocks are
+            # content-addressed and immutable, so a node's local store
+            # survives job restarts (warm restarts re-read, never re-fetch)
+            blocks_dir = (self.workdir / "_blockcache" / spec.job_id
+                          / f"n{rank}")
             client = LazyImageClient(
-                manifest, self.registry, node_dir / "blocks",
+                manifest, self.registry, blocks_dir,
                 node_id=f"node{rank:03d}", peers=peers)
             use_prefetch = (self.optimize
                             and self.hot_service.has_record(manifest.digest))
             if use_prefetch:
-                prefetch_image(client, self.hot_service,
-                               hot_threads=self.hot_threads,
-                               background_cold=True)
+                _, stream_cold = prefetch_image(
+                    client, self.hot_service, hot_threads=self.hot_threads,
+                    pool=self._io_pool, defer_cold=True)
+                if stream_cold is not None:
+                    with deferred_lock:
+                        deferred_cold.append(stream_cold)
             # container start: perform the startup file reads
             for path, off, ln in spec.startup_reads:
                 client.read_file(path, off, ln)
@@ -147,6 +182,12 @@ class BootseerRuntime:
         with ThreadPoolExecutor(n) as ex:
             list(ex.map(node_main, range(n)))
         total = time.perf_counter() - t_start
+        # startup done: stream the cold image remainder while training runs
+        for stream_cold in deferred_cold:
+            try:
+                self._cold_pool.submit(stream_cold)
+            except RuntimeError:  # pool shut down (interpreter exit)
+                break
 
         # record phase upload (first optimized run)
         if "trace" in trace_holder:
@@ -235,5 +276,8 @@ def raw_restore_bytes(checkpointer, step: int, *, rank: int, nodes: int,
             return len(reader.pread(e.offset + rank * per * rb, per * rb))
         return len(reader.pread(e.offset, e.nbytes))
 
-    with ThreadPoolExecutor(threads) as ex:
-        return sum(ex.map(fetch, index.entries.values()))
+    entries = list(index.entries.values())
+    if len(entries) == 1:
+        return fetch(entries[0])
+    with ThreadPoolExecutor(min(threads, max(len(entries), 1))) as ex:
+        return sum(ex.map(fetch, entries))

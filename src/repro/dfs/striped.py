@@ -107,8 +107,13 @@ class StripedWriter:
                 with self.hdfs.throttle:
                     self.hdfs.throttle.charge(n)
 
-        with ThreadPoolExecutor(self.threads) as ex:
-            list(ex.map(write_file, per_file))
+        # size the pool to the files actually touched; a single-file flush
+        # (small archives) runs inline instead of spinning up threads
+        if len(per_file) == 1:
+            write_file(next(iter(per_file)))
+        else:
+            with ThreadPoolExecutor(min(self.threads, len(per_file))) as ex:
+                list(ex.map(write_file, per_file))
 
     def _meta_for(self, size: int) -> StripedMeta:
         return StripedMeta(size=size, width=self.width, chunk=self.chunk,
@@ -183,8 +188,12 @@ class StripedReader:
                 with self.hdfs.throttle:
                     self.hdfs.throttle.charge(n)
 
-        with ThreadPoolExecutor(self.threads) as ex:
-            list(ex.map(read_file, jobs))
+        # single-file reads (sub-stripe ranges) skip the pool entirely
+        if len(jobs) == 1:
+            read_file(next(iter(jobs)))
+        else:
+            with ThreadPoolExecutor(min(self.threads, len(jobs))) as ex:
+                list(ex.map(read_file, jobs))
         return bytes(out)
 
     def read_all(self) -> bytes:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, SHAPES, get_config, get_tiny
 from repro.launch.mesh import make_production_mesh
 from repro.models.frontend import needs_embeddings
@@ -150,7 +151,7 @@ def run_one(arch: str, shape_id: str, *, multi_pod: bool = False,
                   "temp_size_in_bytes", "alias_size_in_bytes",
                   "peak_memory_in_bytes"):
             mem[k] = getattr(ma, k, 0)
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo, default_trips=cfg.num_layers)
     if save_hlo:

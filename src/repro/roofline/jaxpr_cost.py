@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 def _nbytes(aval) -> int:
     try:
@@ -96,11 +98,10 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
             flops += f
             bytes_ += b
         elif name == "shard_map":
-            body = _jaxpr_of(eqn.params["jaxpr"])
-            f, b = jaxpr_cost(body, while_trips=while_trips)
-            mesh = eqn.params.get("mesh")
-            n = getattr(mesh, "size", None) or math.prod(
-                dict(getattr(mesh, "shape", {})).values() or [1])
+            body = compat.shard_map_body(eqn.params)
+            f, b = (jaxpr_cost(body, while_trips=while_trips)
+                    if body is not None else (0.0, 0.0))
+            n = compat.shard_map_mesh_size(eqn.params)
             flops += f * n
             bytes_ += b * n
         elif any(k in eqn.params and hasattr(

@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 
 
@@ -163,7 +164,5 @@ def make_rules(mesh: Mesh, *, moe_sharding: str = "tp", **kw) -> Rules:
 
 def single_device_rules(**kw) -> Rules:
     """A (1, 1) mesh over ("data", "model") for CPU smoke tests."""
-    import numpy as np
-    dev = np.array(jax.devices()[:1]).reshape(1, 1)
-    mesh = Mesh(dev, ("data", "model"))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     return make_rules(mesh, **kw)

@@ -126,6 +126,25 @@ class TestP2P:
         assert c1.stats["registry_fetches"] == 0
         assert group.stats["n0"]["blocks_served"] > 0
 
+    def test_concurrent_same_block_single_registry_fetch(self, image_env,
+                                                         tmp_path):
+        """Singleflight: N nodes racing on one block cost ONE registry
+        fetch — the fetcher-of-record publishes, everyone else peers."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        _, reg, man, files = image_env
+        group = PeerGroup()
+        clients = [LazyImageClient(man, reg, tmp_path / f"cc{i}",
+                                   node_id=f"cc{i}", peers=group)
+                   for i in range(3)]
+        h = man.file_map()["lib.so"].blocks[0]
+        before = reg.stats["block_requests"]
+        with ThreadPoolExecutor(3) as ex:
+            datas = list(ex.map(lambda c: c.ensure_block(h), clients))
+        assert all(d == datas[0] for d in datas)
+        assert reg.stats["block_requests"] - before == 1
+        assert all(c.has_block(h) for c in clients)
+
     def test_load_spreads_across_peers(self, image_env, tmp_path):
         _, reg, man, files = image_env
         group = PeerGroup()

@@ -97,3 +97,110 @@ class TestEnvCache:
         meta = cache.create(job_cache_key({}), t0, before)
         assert meta["files"] == 1
         assert meta["raw_bytes"] < 100_000
+
+
+class TestRestoreHotPath:
+    def _make_cache(self, mount, tmp_path, **kw):
+        cache = EnvCache(mount, local_cache=tmp_path / "local", **kw)
+        t0 = tmp_path / "install"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        (t0 / "big.bin").write_bytes(b"b" * 600_000)  # exercises pool path
+        key = job_cache_key({"deps": ["pkg==1"]})
+        cache.create(key, t0, before)
+        return cache, key, t0
+
+    def test_one_dfs_archive_fetch_per_node(self, mount, tmp_path):
+        """N concurrent restores on one node = exactly ONE archive fetch
+        from the DFS (singleflight + local archive cache), for any N."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        cache, key, t0 = self._make_cache(mount, tmp_path)
+
+        opens = []
+        orig_open = mount.open
+
+        def counting_open(path):
+            opens.append(path)
+            return orig_open(path)
+
+        mount.open = counting_open
+        n_threads = 8
+        with ThreadPoolExecutor(n_threads) as ex:
+            metas = list(ex.map(
+                lambda i: cache.restore(key, tmp_path / f"node{i}"),
+                range(n_threads)))
+        assert all(m is not None for m in metas)
+        data_path = cache._data_path(key)
+        assert sum(1 for p in opens if p == data_path) == 1
+        assert cache.stats["dfs_archive_fetches"] == 1
+        assert cache.stats["local_cache_hits"] == n_threads - 1
+        # every thread got a complete extraction
+        for i in range(n_threads):
+            assert (tmp_path / f"node{i}" / "pkg" / "core.py").read_text() \
+                == (t0 / "pkg" / "core.py").read_text()
+            assert (tmp_path / f"node{i}" / "big.bin").stat().st_size \
+                == 600_000
+
+    def test_restore_without_local_cache_streams_from_dfs(self, mount,
+                                                          tmp_path):
+        cache = EnvCache(mount)  # no local cache configured
+        t0 = tmp_path / "inst"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        key = job_cache_key({"v": "stream"})
+        cache.create(key, t0, before)
+        assert cache.restore(key, tmp_path / "out") is not None
+        assert (tmp_path / "out" / "top.py").exists()
+        assert cache.stats["dfs_archive_fetches"] == 1
+
+    def test_restore_works_without_tarfile_data_filter(self, mount,
+                                                       tmp_path,
+                                                       monkeypatch):
+        """Restore must not depend on extractall(filter=...) — Pythons
+        < 3.12 may lack it entirely."""
+        import tarfile
+
+        monkeypatch.delattr(tarfile, "data_filter", raising=False)
+        monkeypatch.delattr(tarfile.TarFile, "extraction_filter",
+                            raising=False)
+        cache, key, t0 = self._make_cache(mount, tmp_path)
+        assert cache.restore(key, tmp_path / "out") is not None
+        assert (tmp_path / "out" / "pkg" / "core.py").read_text() \
+            == (t0 / "pkg" / "core.py").read_text()
+
+    def test_corrupt_local_archive_refetched_from_dfs(self, mount, tmp_path):
+        """Disk rot in the node-local cache must not brick warm restarts:
+        restore invalidates the bad file and refetches from the DFS."""
+        cache, key, t0 = self._make_cache(mount, tmp_path)
+        cache.restore(key, tmp_path / "first")  # populates the local cache
+        cache._local_path(key).write_bytes(b"CORRUPT")
+        meta = cache.restore(key, tmp_path / "second")
+        assert meta is not None
+        assert (tmp_path / "second" / "pkg" / "core.py").read_text() == \
+            (t0 / "pkg" / "core.py").read_text()
+        assert cache.stats["dfs_archive_fetches"] == 2  # initial + refetch
+
+    def test_unsafe_member_rejected(self, mount, tmp_path):
+        """A malicious archive with path traversal must not extract."""
+        import io
+        import tarfile
+
+        import pytest as _pytest
+
+        buf = io.BytesIO()
+        with tarfile.open(fileobj=buf, mode="w") as tar:
+            info = tarfile.TarInfo("../evil.py")
+            payload = b"boom"
+            info.size = len(payload)
+            tar.addfile(info, io.BytesIO(payload))
+        from repro.envcache.snapshot import _compress
+        cache = EnvCache(mount)
+        key = "deadbeefdeadbeefdeadbeef"
+        mount.write(cache._data_path(key), _compress(buf.getvalue()))
+        mount.write(cache._meta_path(key), b'{"files": 1}')
+        with _pytest.raises(tarfile.TarError):
+            cache.restore(key, tmp_path / "out")
+        assert not (tmp_path / "evil.py").exists()

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.roofline.jaxpr_cost import analytic_cost
 
 
@@ -65,9 +66,9 @@ class TestWalker:
 
     def test_shard_map_counts_all_shards(self, rules):
         from jax.sharding import PartitionSpec as P
-        body = jax.shard_map(lambda x: x @ x, mesh=rules.mesh,
-                             in_specs=P(None, None),
-                             out_specs=P(None, None), check_vma=False)
+        body = compat.shard_map(lambda x: x @ x, mesh=rules.mesh,
+                                in_specs=P(None, None),
+                                out_specs=P(None, None), check_vma=False)
         c = analytic_cost(body, _w(32, 32))["flops"]
         # 1-device mesh -> exactly one shard's flops
         assert c >= 2 * 32 * 32 * 32
