@@ -1,0 +1,116 @@
+"""§4.4 resume benchmark — planned sharding-aware restore vs naive
+full-checkpoint restore, across 1–32 simulated hosts.
+
+A tensor-parallel-style checkpoint (row- and column-sharded matrices plus
+replicated smalls) is saved striped; per host count N, every rank builds
+its PartitionSpec-derived restore plan and executes it with batched
+``pread_many`` reads.  Reports counted DFS bytes (HdfsCluster read
+accounting — deterministic, unlike wall clock on shared CI boxes) and
+wall time, and optionally writes a JSON artifact for CI upload.
+
+    PYTHONPATH=src python benchmarks/bench_resume.py --json bench.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.ckpt.plan import execute_plan
+from repro.dfs.hdfs import HdfsCluster
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:  # script mode: put the repo root on sys.path
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import emit
+
+
+def _params(mb: int):
+    """~``mb`` MiB of TP-style tensors, shardable 32 ways."""
+    rows = mb * (1 << 20) // (2 * 4 * 2048)
+    rng = np.random.default_rng(0)
+    return {
+        "w_in": rng.standard_normal((rows, 2048)).astype(np.float32),
+        "w_out": rng.standard_normal((2048, rows)).astype(np.float32),
+        "scale": rng.standard_normal((2048,)).astype(np.float32),
+    }
+
+
+SPECS = ({"w_in": P(None, "model"), "w_out": P("model", None),
+          "scale": P("model")},)
+
+
+def run(hosts=(1, 2, 4, 8, 16, 32), mb: int = 32, json_path=None):
+    rows = []
+    report = {"mb": mb, "hosts": []}
+    with tempfile.TemporaryDirectory() as d:
+        hdfs = HdfsCluster(Path(d), num_groups=8, block_size=1 << 20)
+        ck = Checkpointer(hdfs, striped=True, width=8)
+        params = _params(mb)
+        ck.save(1, params)
+        index = ck.load_index(1)
+        total = index.total_bytes
+        reader = ck._reader(1)
+
+        # naive restore: every host reads every tensor in full
+        hdfs.reset_counters()
+        t0 = time.perf_counter()
+        for e in index.entries.values():
+            reader.pread(e.offset, e.nbytes)
+        naive_s = time.perf_counter() - t0
+        naive_bytes = hdfs.read_bytes
+
+        for n in hosts:
+            planned_bytes = []
+            t0 = time.perf_counter()
+            for rank in range(n):
+                hdfs.reset_counters()
+                _, plans = ck.plan_restore(
+                    1, params, specs=SPECS, axis_sizes={"model": n},
+                    coords={"model": rank})
+                for plan in plans:
+                    execute_plan(reader, plan)
+                planned_bytes.append(hdfs.read_bytes)
+            per_host = max(planned_bytes)
+            planned_s = (time.perf_counter() - t0) / n
+            report["hosts"].append({
+                "n": n,
+                "total_bytes": total,
+                "planned_bytes_per_host": per_host,
+                "naive_bytes_per_host": naive_bytes,
+                "planned_s_per_host": round(planned_s, 4),
+                "naive_s_per_host": round(naive_s, 4),
+            })
+            rows.append((
+                f"resume.planned_MiB_per_host.n{n}",
+                round(per_host / 2**20, 2),
+                f"naive {naive_bytes / 2**20:.1f} MiB "
+                f"(x{naive_bytes / max(per_host, 1):.1f} less I/O)"))
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+    emit(rows, f"Sharding-aware resume ({mb} MiB ckpt, hosts {list(hosts)})")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mb", type=int, default=32)
+    ap.add_argument("--hosts", type=int, nargs="*",
+                    default=[1, 2, 4, 8, 16, 32])
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    run(hosts=tuple(args.hosts), mb=args.mb,
+        json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

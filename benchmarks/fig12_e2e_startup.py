@@ -85,7 +85,7 @@ def run_real_io(tmp_root: str, nodes: int = 4):
     spec = JobSpec(job_id="j", image="img", num_nodes=nodes,
                    job_params={"x": 1}, env_setup=env_setup,
                    startup_reads=[("bin/start", 0, -1)], resume_step=1,
-                   shard_fraction=1 / nodes)
+                   resume_plan="rows")
     rb = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=root / "wb",
                          optimize=False).run_startup(
                              spec, checkpointer=ck_plain)

@@ -101,7 +101,7 @@ def main():
         print("\n== run 2: warm RESTART (prefetch + env cache + striped "
               "resume) ==")
         spec2 = JobSpec(**{**spec.__dict__, "resume_step": 20,
-                           "shard_fraction": 0.25})
+                           "resume_plan": "rows"})
         r2 = rt.run_startup(spec2, checkpointer=ck)
         print(stage_line(r2))
 
@@ -124,6 +124,7 @@ def main():
                               log_every=5, params=p2, opt_state=o2,
                               start_step=20)
 
+        rt.drain_deferred()   # deferred opt-state wave must have succeeded
         speedup = rb.total_s / r2.total_s
         print(f"\nrestart startup speedup vs baseline: x{speedup:.2f} "
               f"({rb.total_s:.2f}s -> {r2.total_s:.2f}s)")

@@ -1,2 +1,6 @@
 from repro.ckpt.checkpoint import Checkpointer  # noqa: F401
 from repro.ckpt.index import TensorIndex, TensorEntry  # noqa: F401
+from repro.ckpt.plan import (RestorePlan, ReadOp, Segment,  # noqa: F401
+                             TensorPlan, build_restore_plan,
+                             dim_slices_for_spec, execute_plan,
+                             plan_for_rank, read_plan, tensor_ranges)

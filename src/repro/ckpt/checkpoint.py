@@ -4,23 +4,28 @@ Save: flatten the pytree with key paths, serialize leaves into one logical
 stream, write via ``StripedWriter`` (parallel across stripe files), store the
 ``TensorIndex`` manifest alongside.
 
-Restore: read the manifest, then fetch tensors in parallel.  The
-*sharding-aware* path reads only the byte ranges a host's shard needs
-(leading-dim sharded tensors map to contiguous row ranges; anything else
-falls back to a full read) — this is what keeps resume time proportional to
-``bytes_per_host`` rather than total checkpoint size.
+Restore: read the manifest, derive a sharding-aware *restore plan*
+(repro.ckpt.plan) — per-host byte ranges for any sharded dim, coalesced into
+batched reads — and execute it with ``pread_many`` (each physical stripe
+file opened at most once per wave, bytes landing zero-copy in preallocated
+per-tensor buffers).  This keeps resume cost proportional to
+``bytes_per_host`` rather than total checkpoint size.  Restores run in two
+waves: wave 0 is the first tree (params), wave 1 the remaining trees
+(optimizer state), which ``async_tail=True`` streams on a background thread
+so the caller can overlap it with model init.
 """
 
 from __future__ import annotations
 
-import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.ckpt.index import TensorIndex
+from repro.ckpt.plan import (RestorePlan, build_restore_plan,
+                             dim_slices_for_spec, execute_plan)
 from repro.dfs.hdfs import HdfsCluster
 from repro.dfs.striped import StripedReader, StripedWriter
 
@@ -28,6 +33,34 @@ from repro.dfs.striped import StripedReader, StripedWriter
 def _flat_with_names(tree: Any) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _is_spec_leaf(x: Any) -> bool:
+    from jax.sharding import PartitionSpec
+    return x is None or isinstance(x, PartitionSpec)
+
+
+def _flat_specs(spec_tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a PartitionSpec tree (None leaves = replicated)."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=_is_spec_leaf)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class _PlainReader:
+    """Range reads over a non-striped checkpoint file, with the same
+    ``pread``/``pread_many`` contract as ``StripedReader``."""
+
+    def __init__(self, hdfs: HdfsCluster, path: str):
+        self._hdfs = hdfs
+        self._path = path
+
+    def pread(self, off: int, ln: int) -> bytes:
+        return self._hdfs.pread(self._path, off, ln)
+
+    def pread_many(self, ranges, into=None):
+        from repro.dfs.striped import pread_many_fallback
+        return pread_many_fallback(self.pread, ranges, into=into)
 
 
 class Checkpointer:
@@ -95,12 +128,132 @@ class Checkpointer:
         if "striped" in attrs:
             return StripedReader(self.hdfs, self.data_path(step),
                                  threads=self.threads)
-        hdfs, path = self.hdfs, self.data_path(step)
+        return _PlainReader(self.hdfs, self.data_path(step))
 
-        class _Plain:
-            def pread(self, off, ln):
-                return hdfs.pread(path, off, ln)
-        return _Plain()
+    def _dim_slices(self, index: TensorIndex, likes: tuple, *,
+                    specs=None, rules=None, axis_sizes=None, coords=None,
+                    shard_slices: Optional[dict] = None) -> dict:
+        """{index entry name: per-dim (start, size)} for this host."""
+        out: dict = {}
+        if shard_slices:  # legacy {name: (start_row, n_rows)} rows form
+            for name, rows in shard_slices.items():
+                try:
+                    e = index.resolve(name)
+                except KeyError:
+                    continue
+                if len(e.shape) >= 1:
+                    out[e.name] = (tuple(rows),)
+        if specs is None:
+            return out
+        sizes = dict(axis_sizes or {})
+        if rules is not None and not sizes:
+            sizes = dict(rules.mesh.shape)
+        coords = dict(coords or {})
+        for ti, spec_tree in enumerate(specs):
+            if spec_tree is None or ti >= len(likes):
+                continue
+            for name, spec in _flat_specs(spec_tree):
+                if spec is None:
+                    continue
+                try:
+                    e = index.resolve(f"t{ti}{name}")
+                except KeyError:
+                    continue
+                out[e.name] = dim_slices_for_spec(spec, e.shape, sizes,
+                                                  coords)
+        return out
+
+    def _wave_names(self, index: TensorIndex,
+                    n_likes: int) -> list[list[str]]:
+        """Entry names per restore wave, each in stream order: wave 0 is
+        tree 0 (params), wave 1 the remaining trees (optimizer state).
+        A single-tree restore keeps everything in one wave."""
+        waves = index.wave_names()
+        if n_likes <= 1 and len(waves) > 1:
+            return [[n for w in waves for n in w]]
+        return waves
+
+    def plan_restore(self, step: int, *likes: Any, specs=None, rules=None,
+                     axis_sizes=None, coords=None,
+                     shard_slices: Optional[dict] = None,
+                     **plan_kw) -> tuple[TensorIndex, list[RestorePlan]]:
+        """Build this host's restore plan for ``step``: one ``RestorePlan``
+        per wave (params, then optimizer state).
+
+        Sharding is described either by ``specs`` — a tuple of
+        PartitionSpec trees congruent to ``likes`` (``None`` entries =
+        fully replicated) evaluated against ``rules``/``axis_sizes`` +
+        ``coords`` (axis name -> this host's coordinate) — or by the
+        legacy ``shard_slices`` ``{tensor_name: (start_row, n_rows)}``
+        leading-dim form.  With neither, the full checkpoint is planned.
+        """
+        index = self.load_index(step)
+        slices = self._dim_slices(index, likes, specs=specs, rules=rules,
+                                  axis_sizes=axis_sizes, coords=coords,
+                                  shard_slices=shard_slices)
+        plans = [build_restore_plan(index, names, slices, **plan_kw)
+                 for names in self._wave_names(index, len(likes))]
+        return index, plans
+
+    def _execute_wave(self, reader, plan: RestorePlan) -> dict:
+        """Run one wave; {entry name: array} with bf16 views restored."""
+        arrays = execute_plan(reader, plan)
+        out = {}
+        for t, arr in zip(plan.tensors, arrays):
+            if t.name.endswith("#bf16"):
+                arr = arr.view(jax.numpy.bfloat16)
+            out[t.name] = arr
+        return out
+
+    def _assemble(self, likes: tuple, first_ti: int, results: dict) -> list:
+        out = []
+        for k, like in enumerate(likes):
+            leaves = []
+            for name, _ in _flat_with_names(like):
+                key = f"t{first_ti + k}{name}"
+                arr = results.get(key, results.get(key + "#bf16"))
+                assert arr is not None, f"missing tensor {key}"
+                leaves.append(arr)
+            out.append(jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), leaves))
+        return out
+
+    def restore_planned(self, step: int, *likes: Any, specs=None,
+                        rules=None, axis_sizes=None, coords=None,
+                        shard_slices: Optional[dict] = None,
+                        async_tail: bool = False, **plan_kw):
+        """Planner-backed restore of trees congruent to ``likes``.
+
+        Returns ``tuple(trees)`` — or, with ``async_tail=True``, the pair
+        ``(first_tree, Future)`` where the Future resolves to the tuple of
+        remaining trees: the optimizer-state wave streams on a background
+        thread so the caller can overlap it with model initialization.
+        """
+        index, plans = self.plan_restore(
+            step, *likes, specs=specs, rules=rules, axis_sizes=axis_sizes,
+            coords=coords, shard_slices=shard_slices, **plan_kw)
+        reader = self._reader(step)
+        results = self._execute_wave(reader, plans[0]) if plans else {}
+        if not async_tail:
+            for plan in plans[1:]:
+                results.update(self._execute_wave(reader, plan))
+            return tuple(self._assemble(likes, 0, results))
+        first = self._assemble(likes[:1], 0, results)[0]
+
+        def _tail():
+            res = {}
+            for plan in plans[1:]:
+                res.update(self._execute_wave(reader, plan))
+            return tuple(self._assemble(likes[1:], 1, res))
+
+        if len(likes) <= 1:
+            fut: Future = Future()
+            fut.set_result(())
+            return first, fut
+        pool = ThreadPoolExecutor(1, thread_name_prefix="ckpt-tail")
+        fut = pool.submit(_tail)
+        pool.shutdown(wait=False)   # the queued tail still completes
+        return first, fut
 
     def restore(self, step: int, *likes: Any,
                 shard_slices: Optional[dict] = None) -> tuple:
@@ -109,46 +262,10 @@ class Checkpointer:
 
         ``shard_slices``: optional {tensor_name: (start_row, n_rows)} for
         sharding-aware partial restore of leading-dim sharded tensors; the
-        returned leaves then hold only those rows.
+        returned leaves then hold only those rows.  (For arbitrary-dim
+        sharding use ``restore_planned`` with PartitionSpec trees.)
         """
-        index = self.load_index(step)
-        reader = self._reader(step)
-        results: dict[str, np.ndarray] = {}
-        lock = threading.Lock()
-
-        def fetch(name_entry):
-            name, e = name_entry
-            bf16 = name.endswith("#bf16")
-            rows = (shard_slices or {}).get(name)
-            if rows is not None and len(e.shape) >= 1:
-                start, n = rows
-                rb = e.row_bytes()
-                raw = reader.pread(e.offset + start * rb, n * rb)
-                shape = (n,) + e.shape[1:]
-            else:
-                raw = reader.pread(e.offset, e.nbytes)
-                shape = e.shape
-            arr = np.frombuffer(raw, dtype=e.dtype).reshape(shape)
-            if bf16:
-                arr = arr.view(jax.numpy.bfloat16)
-            with lock:
-                results[name] = arr
-
-        with ThreadPoolExecutor(self.threads) as ex:
-            list(ex.map(fetch, index.entries.items()))
-
-        out = []
-        for ti, like in enumerate(likes):
-            names_leaves = _flat_with_names(like)
-            leaves = []
-            for name, leaf in names_leaves:
-                key = f"t{ti}{name}"
-                arr = results.get(key, results.get(key + "#bf16"))
-                assert arr is not None, f"missing tensor {key}"
-                leaves.append(arr)
-            tree_def = jax.tree_util.tree_structure(like)
-            out.append(jax.tree_util.tree_unflatten(tree_def, leaves))
-        return tuple(out)
+        return self.restore_planned(step, *likes, shard_slices=shard_slices)
 
     def restore_bytes_for_shard(self, step: int, fraction: float) -> int:
         """How many bytes a host reading 1/N of every tensor fetches."""

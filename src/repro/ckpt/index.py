@@ -34,10 +34,32 @@ class TensorIndex:
 
     @property
     def total_bytes(self) -> int:
-        if not self.entries:
-            return 0
-        last = max(self.entries.values(), key=lambda e: e.offset)
-        return last.offset + last.nbytes
+        # max over end offsets, not offset of the max-offset entry: a
+        # zero-byte entry (empty array) can TIE a real tensor's offset and
+        # must not shadow its extent
+        return max((e.offset + e.nbytes for e in self.entries.values()),
+                   default=0)
+
+    def entries_by_offset(self) -> list[TensorEntry]:
+        """Entries in stream order — the order restore plans read them."""
+        return sorted(self.entries.values(), key=lambda e: e.offset)
+
+    def wave_names(self) -> list[list[str]]:
+        """Stream-ordered entry names split into restore waves: tree 0
+        (params — they gate model init) first, the remaining trees
+        (optimizer state) second."""
+        order = self.entries_by_offset()
+        first = [e.name for e in order if e.name.startswith("t0")]
+        rest = [e.name for e in order if not e.name.startswith("t0")]
+        return [w for w in (first, rest) if w]
+
+    def resolve(self, name: str) -> TensorEntry:
+        """Look up ``name``, accepting the logical name for entries stored
+        with the ``#bf16`` encoding suffix."""
+        e = self.entries.get(name) or self.entries.get(name + "#bf16")
+        if e is None:
+            raise KeyError(f"missing tensor {name}")
+        return e
 
     def add(self, name: str, dtype, shape) -> TensorEntry:
         e = TensorEntry(name=name, dtype=str(np.dtype(dtype)),

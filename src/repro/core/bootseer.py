@@ -17,7 +17,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 from repro.blockstore.lazy import LazyImageClient
 from repro.blockstore.p2p import PeerGroup
@@ -44,8 +44,13 @@ class JobSpec:
     env_setup: Optional[Callable] = None
     # checkpoint to resume (step number in the job's Checkpointer), or None
     resume_step: Optional[int] = None
-    # fraction of each tensor a single node restores (sharding-aware read)
-    shard_fraction: float = 1.0
+    # per-rank restore planning for the resume stage (repro.ckpt.plan):
+    #   "full"  — every node reads the whole checkpoint;
+    #   "rows"  — leading-dim row split across nodes (bytes_per_host);
+    #   callable (index, rank, nodes) -> list[RestorePlan] — fully
+    #   sharding-aware per-rank wave plans (e.g. built from Rules
+    #   PartitionSpecs via Checkpointer.plan_restore).
+    resume_plan: Any = "full"
 
 
 @dataclass
@@ -88,9 +93,41 @@ class BootseerRuntime:
         # remainder can never queue ahead of a later run's hot prefetch
         self._cold_pool = ThreadPoolExecutor(
             2, thread_name_prefix="bootseer-cold")
+        # deferred background work (cold image streaming, optimizer-state
+        # restore waves) must not fail silently: futures collect here and
+        # drain_deferred() re-raises their failures.  All error state is
+        # derived from the futures themselves — no done-callback
+        # bookkeeping, which would race the Future waiters.
+        self._deferred_futures: list = []
+
+    def _submit_deferred(self, thunk):
+        try:
+            self._deferred_futures.append(self._cold_pool.submit(thunk))
+        except RuntimeError:  # pool shut down (interpreter exit)
+            pass
+
+    def drain_deferred(self):
+        """Block until all deferred background work (cold image streaming,
+        optimizer-state restore waves) has finished, then re-raise the
+        first failure — e.g. a ``StripeMissingError`` from a wave-1 read —
+        so a corrupt deferred restore cannot pass unnoticed."""
+        futures, self._deferred_futures = self._deferred_futures, []
+        errors = [err for err in (fut.exception() for fut in futures)
+                  if err is not None]
+        if errors:
+            raise errors[0]
 
     def close(self):
-        """Release the runtime's worker pools (idempotent)."""
+        """Release the runtime's worker pools (idempotent).  Does not
+        block on deferred work, but failures already observed in
+        undrained deferred futures are at least reported before they are
+        lost."""
+        import sys
+        for fut in self._deferred_futures:
+            if fut.done() and fut.exception() is not None:
+                print("bootseer: deferred background failure was never "
+                      f"drained: {fut.exception()!r}", file=sys.stderr)
+        self._deferred_futures = []
         self._io_pool.shutdown(wait=False)
         self._cold_pool.shutdown(wait=False)
         self.env_cache.close()
@@ -104,7 +141,11 @@ class BootseerRuntime:
     # ------------------------------------------------------------------
     def run_startup(self, spec: JobSpec,
                     checkpointer=None) -> StartupResult:
-        """Execute one Full Startup of ``spec`` across its worker nodes."""
+        """Execute one Full Startup of ``spec`` across its worker nodes.
+
+        Raises any failure left behind by a previous run's deferred
+        background work (see :meth:`drain_deferred`) before starting."""
+        self.drain_deferred()
         run_idx = self._run_counter.get(spec.job_id, 0)
         self._run_counter[spec.job_id] = run_idx + 1
         job_tag = f"{spec.job_id}#r{run_idx}"
@@ -115,9 +156,14 @@ class BootseerRuntime:
         loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
         t_start = time.perf_counter()
         trace_holder: dict = {}
-        # cold image blocks stream only after the startup critical path
+        # cold image blocks and the optimizer-state restore wave stream
+        # only after the startup critical path
         deferred_cold: list = []
         deferred_lock = threading.Lock()
+
+        def defer(thunk):
+            with deferred_lock:
+                deferred_cold.append(thunk)
 
         def node_main(rank: int):
             log = loggers[rank]
@@ -172,9 +218,12 @@ class BootseerRuntime:
             # ---- Model Initialization ----
             log.begin(Stage.MODEL_INIT)
             if spec.resume_step is not None and checkpointer is not None:
-                raw_restore_bytes(checkpointer, spec.resume_step, rank=rank,
-                                  nodes=n,
-                                  shard_fraction=spec.shard_fraction)
+                # wave 0 (params) reads on the critical path; wave 1
+                # (optimizer state) streams deferred, overlapping training
+                planned_restore_bytes(
+                    checkpointer, spec.resume_step, rank=rank, nodes=n,
+                    resume_plan=spec.resume_plan,
+                    defer=defer if self.optimize else None)
             log.end(Stage.MODEL_INIT)
             barrier.wait()
             log.begin(Stage.TRAINING)
@@ -182,12 +231,10 @@ class BootseerRuntime:
         with ThreadPoolExecutor(n) as ex:
             list(ex.map(node_main, range(n)))
         total = time.perf_counter() - t_start
-        # startup done: stream the cold image remainder while training runs
-        for stream_cold in deferred_cold:
-            try:
-                self._cold_pool.submit(stream_cold)
-            except RuntimeError:  # pool shut down (interpreter exit)
-                break
+        # startup done: stream the cold image remainder (and any deferred
+        # optimizer-state restore waves) while training runs
+        for thunk in deferred_cold:
+            self._submit_deferred(thunk)
 
         # record phase upload (first optimized run)
         if "trace" in trace_holder:
@@ -210,6 +257,7 @@ class BootseerRuntime:
         """Hot Update (§2.2): a PARTIAL startup — container and image stay,
         but the environment is set up again and the model re-initialized.
         Profiled like a full startup minus IMAGE_LOAD."""
+        self.drain_deferred()
         run_idx = self._run_counter.get(spec.job_id, 0)
         self._run_counter[spec.job_id] = run_idx + 1
         job_tag = f"{spec.job_id}#h{run_idx}"
@@ -217,6 +265,12 @@ class BootseerRuntime:
         barrier = threading.Barrier(n)
         loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
         t_start = time.perf_counter()
+        deferred: list = []
+        deferred_lock = threading.Lock()
+
+        def defer(thunk):
+            with deferred_lock:
+                deferred.append(thunk)
 
         def node_main(rank: int):
             log = loggers[rank]
@@ -240,9 +294,10 @@ class BootseerRuntime:
 
             log.begin(Stage.MODEL_INIT)
             if spec.resume_step is not None and checkpointer is not None:
-                raw_restore_bytes(checkpointer, spec.resume_step, rank=rank,
-                                  nodes=n,
-                                  shard_fraction=spec.shard_fraction)
+                planned_restore_bytes(
+                    checkpointer, spec.resume_step, rank=rank, nodes=n,
+                    resume_plan=spec.resume_plan,
+                    defer=defer if self.optimize else None)
             log.end(Stage.MODEL_INIT)
             barrier.wait()
             log.begin(Stage.TRAINING)
@@ -250,6 +305,9 @@ class BootseerRuntime:
         with ThreadPoolExecutor(n) as ex:
             list(ex.map(node_main, range(n)))
         total = time.perf_counter() - t_start
+        # optimizer-state restore waves stream after the critical path
+        for thunk in deferred:
+            self._submit_deferred(thunk)
         for log in loggers:
             self.analysis.ingest_log(log.lines())
         return StartupResult(
@@ -259,25 +317,40 @@ class BootseerRuntime:
                                   "hot_update": True})
 
 
-def raw_restore_bytes(checkpointer, step: int, *, rank: int, nodes: int,
-                      shard_fraction: float, threads: int = 8) -> int:
-    """Read this node's share of the checkpoint (I/O only).  Returns bytes.
+def planned_restore_bytes(checkpointer, step: int, *, rank: int, nodes: int,
+                          resume_plan: Any = "full",
+                          defer: Optional[Callable] = None) -> int:
+    """Read this node's planned share of the checkpoint (I/O only).
 
-    Tensors are fetched in parallel (like Checkpointer.restore); striped
-    files additionally parallelize within each read.
+    The restore planner (repro.ckpt.plan) turns ``resume_plan`` into
+    batched ``pread_many`` reads split into two waves: wave 0 (params,
+    tree 0) gates MODEL_INIT and is read synchronously; wave 1 (optimizer
+    state) is handed to ``defer`` — a callable accepting a thunk — so the
+    runtime can stream it off the startup critical path, overlapping model
+    init/training.  Without ``defer`` both waves are read synchronously.
+    Returns the bytes read on the critical path (wave 0, plus wave 1 when
+    not deferred).
     """
+    from repro.ckpt.plan import plan_for_rank, read_plan
+
     index = checkpointer.load_index(step)
     reader = checkpointer._reader(step)
-
-    def fetch(e):
-        if shard_fraction < 1.0 and e.shape and e.shape[0] >= nodes:
-            per = e.shape[0] // nodes
-            rb = e.row_bytes()
-            return len(reader.pread(e.offset + rank * per * rb, per * rb))
-        return len(reader.pread(e.offset, e.nbytes))
-
-    entries = list(index.entries.values())
-    if len(entries) == 1:
-        return fetch(entries[0])
-    with ThreadPoolExecutor(min(threads, max(len(entries), 1))) as ex:
-        return sum(ex.map(fetch, entries))
+    if callable(resume_plan):
+        plans = list(resume_plan(index, rank, nodes))
+    else:
+        if resume_plan not in ("full", "rows"):
+            raise ValueError(
+                f"unknown resume_plan {resume_plan!r}; expected 'full', "
+                "'rows', or a callable (index, rank, nodes) -> plans")
+        eff_nodes = nodes if resume_plan == "rows" else 1
+        plans = [plan_for_rank(index, rank, eff_nodes, names=names)
+                 for names in index.wave_names()]
+    if not plans:
+        return 0
+    n = read_plan(reader, plans[0])
+    tail = plans[1:]
+    if tail and defer is not None:
+        defer(lambda: sum(read_plan(reader, p) for p in tail))
+    else:
+        n += sum(read_plan(reader, p) for p in tail)
+    return n

@@ -1,3 +1,4 @@
 from repro.dfs.hdfs import HdfsCluster  # noqa: F401
-from repro.dfs.striped import StripedWriter, StripedReader  # noqa: F401
+from repro.dfs.striped import (StripedWriter, StripedReader,  # noqa: F401
+                               StripeMissingError, shared_io_pool)
 from repro.dfs.fuse import HdfsFuseMount  # noqa: F401

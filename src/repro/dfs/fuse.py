@@ -51,6 +51,16 @@ class HdfsFuseFile:
             return self._reader.pread(offset, length)
         return self._mount.hdfs.pread(self.path, offset, length)
 
+    def pread_many(self, ranges, into=None):
+        """Batched ranged reads (see ``StripedReader.pread_many``).  Plain
+        files fall back to per-range preads with the same return contract."""
+        if self._reader is not None:
+            return self._reader.pread_many(ranges, into=into)
+        from repro.dfs.striped import pread_many_fallback
+        return pread_many_fallback(
+            lambda off, ln: self._mount.hdfs.pread(self.path, off, ln),
+            ranges, into=into)
+
     def read(self, length: int = -1) -> bytes:
         if length < 0:
             length = self._size - self._pos

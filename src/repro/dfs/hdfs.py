@@ -100,6 +100,12 @@ class HdfsCluster:
         self._meta: dict[str, FileMeta] = {}
         self._lock = threading.Lock()
         self._counter = 0
+        # deterministic byte accounting (always on, unlike the optional
+        # throttle): every DataNode read/write lands here, including the
+        # per-group files behind striped layouts.  The perf-regression
+        # tests assert on these counters instead of wall clock.
+        self.read_bytes = 0
+        self.write_bytes = 0
         for g in range(num_groups):
             (self.root / f"group{g:02d}").mkdir(parents=True, exist_ok=True)
         self._meta_path = self.root / "namenode.json"
@@ -140,6 +146,21 @@ class HdfsCluster:
     def _block_file(self, bm: BlockMeta) -> Path:
         return self.root / f"group{bm.group:02d}" / bm.path
 
+    # ----- byte accounting -----
+
+    def account_read(self, nbytes: int):
+        with self._lock:
+            self.read_bytes += int(nbytes)
+
+    def account_write(self, nbytes: int):
+        with self._lock:
+            self.write_bytes += int(nbytes)
+
+    def reset_counters(self):
+        with self._lock:
+            self.read_bytes = 0
+            self.write_bytes = 0
+
     # ----- public API -----
 
     def exists(self, path: str) -> bool:
@@ -170,6 +191,7 @@ class HdfsCluster:
             blk_path.write_bytes(chunk)
             meta.blocks.append(BlockMeta(group=group, path=blk_path.name,
                                          length=len(chunk)))
+            self.account_write(len(chunk))
             if self.throttle:
                 with self.throttle:
                     self.throttle.charge(len(chunk))
@@ -199,6 +221,7 @@ class HdfsCluster:
             with open(self._block_file(bm), "rb") as f:
                 f.seek(lo)
                 data = f.read(hi - lo)
+            self.account_read(len(data))
             if self.throttle:
                 with self.throttle:
                     self.throttle.charge(len(data))

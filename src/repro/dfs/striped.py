@@ -15,20 +15,93 @@ Layout math for chunk ``i`` (chunk = 1 MB, stripe = 4 MB = ``spc`` chunks):
 ``StripedReader.pread`` reads an arbitrary (offset, length) range touching
 only the chunks it needs — this is what makes *sharding-aware* checkpoint
 resumption possible (each host fetches only its shard's byte ranges).
+``StripedReader.pread_many`` batches a whole *set* of ranges (a restore
+plan's reads, see repro.ckpt.plan): all chunk sub-reads are grouped per
+physical stripe file, each file is opened AT MOST ONCE per call, and the
+per-file jobs run on one shared long-lived I/O pool instead of a fresh
+``ThreadPoolExecutor`` per read.
 """
 
 from __future__ import annotations
 
-import json
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.dfs.hdfs import BlockMeta, HdfsCluster
 
 CHUNK = 1 * 1024 * 1024
 STRIPE = 4 * 1024 * 1024
+
+
+class StripeMissingError(RuntimeError):
+    """A physical stripe file backing a striped DFS file is missing (or
+    truncated): the logical file cannot be read completely.  Raised instead
+    of returning silently corrupt bytes; names the exact physical file and
+    DataNode group so operators know which replica to repair."""
+
+    def __init__(self, logical_path: str, *, file_index: int, group: int,
+                 name: str, detail: str = "missing"):
+        self.logical_path = logical_path
+        self.file_index = file_index
+        self.group = group
+        self.name = name
+        super().__init__(
+            f"striped file '{logical_path}': physical stripe file '{name}' "
+            f"(stripe index {file_index}, DataNode group {group}) is "
+            f"{detail}")
+
+
+def pread_many_fallback(pread, ranges, into=None):
+    """Per-range ``pread_many`` for non-striped readers, matching
+    ``StripedReader.pread_many``'s return contract (bytes list, or byte
+    counts with ``into`` buffers filled).  Independent ranges run
+    concurrently on the shared I/O pool, so the plain path keeps the
+    multi-tensor fetch parallelism the old restore had."""
+    results: list = [None] * len(ranges)
+
+    def one(i):
+        off, ln = ranges[i]
+        data = pread(off, ln)
+        if into is None:
+            results[i] = data
+        else:
+            memoryview(into[i])[:len(data)] = data
+            results[i] = len(data)
+
+    if len(ranges) <= 1:
+        for i in range(len(ranges)):
+            one(i)
+    else:
+        pool = shared_io_pool()
+        for fu in [pool.submit(one, i) for i in range(len(ranges))]:
+            fu.result()
+    return results
+
+
+_IO_POOL: Optional[ThreadPoolExecutor] = None
+_IO_POOL_LOCK = threading.Lock()
+
+
+def shared_io_pool() -> ThreadPoolExecutor:
+    """Process-wide long-lived pool for striped-DFS file jobs.
+
+    Every reader/writer shares it, so the per-call executor spawn cost
+    (~ms per thread on small boxes) is paid once per process and total
+    I/O concurrency stays bounded by the pool size instead of scaling
+    with the number of concurrent readers.  Tasks submitted here are pure
+    file I/O and never wait on other tasks in this pool, so it cannot
+    deadlock.
+    """
+    global _IO_POOL
+    with _IO_POOL_LOCK:
+        if _IO_POOL is None:
+            _IO_POOL = ThreadPoolExecutor(
+                max(4, 2 * (os.cpu_count() or 2)),
+                thread_name_prefix="dfs-io")
+        return _IO_POOL
 
 
 @dataclass(frozen=True)
@@ -99,21 +172,24 @@ class StripedWriter:
 
         def write_file(f):
             h = self._handles[f]
+            n = 0
             for off, payload in per_file[f]:
                 h.seek(off)
                 h.write(payload)
+                n += len(payload)
+            self.hdfs.account_write(n)
             if self.hdfs.throttle:
-                n = sum(len(p) for _, p in per_file[f])
                 with self.hdfs.throttle:
                     self.hdfs.throttle.charge(n)
 
-        # size the pool to the files actually touched; a single-file flush
-        # (small archives) runs inline instead of spinning up threads
+        # a single-file flush (small archives) runs inline instead of
+        # round-tripping through the pool
         if len(per_file) == 1:
             write_file(next(iter(per_file)))
         else:
-            with ThreadPoolExecutor(min(self.threads, len(per_file))) as ex:
-                list(ex.map(write_file, per_file))
+            pool = shared_io_pool()
+            for fu in [pool.submit(write_file, f) for f in per_file]:
+                fu.result()
 
     def _meta_for(self, size: int) -> StripedMeta:
         return StripedMeta(size=size, width=self.width, chunk=self.chunk,
@@ -143,58 +219,125 @@ class StripedWriter:
 
 
 class StripedReader:
-    """Parallel positional reads of a striped file."""
+    """Parallel positional reads of a striped file.
+
+    All read paths funnel through :meth:`pread_many`: sub-reads are grouped
+    per physical stripe file, sorted and merged into sequential runs, each
+    file is opened at most once per call, and the per-file jobs run on the
+    shared long-lived I/O pool (``threads`` is kept for API compat but the
+    pool bounds actual concurrency).
+    """
 
     def __init__(self, hdfs: HdfsCluster, path: str,
-                 threads: Optional[int] = None):
+                 threads: Optional[int] = None,
+                 pool: Optional[ThreadPoolExecutor] = None):
         self.hdfs = hdfs
+        self.path = path
         raw = hdfs.attrs(path)["striped"]
         self.meta = StripedMeta(size=raw["size"], width=raw["width"],
                                 chunk=raw["chunk"], stripe=raw["stripe"],
                                 files=tuple(tuple(f) for f in raw["files"]))
         self.threads = threads or self.meta.width
+        self._pool = pool
 
     @property
     def size(self) -> int:
         return self.meta.size
 
     def pread(self, offset: int, length: int) -> bytes:
-        m = self.meta
-        length = min(length, m.size - offset)
-        if length <= 0:
-            return b""
-        first = offset // m.chunk
-        last = (offset + length - 1) // m.chunk
-        # gather the chunk reads, grouped per physical file
-        jobs: dict[int, list[tuple[int, int, int, int]]] = {}
-        for ci in range(first, last + 1):
-            f, base = m.locate(ci)
-            lo = max(offset - ci * m.chunk, 0)
-            hi = min(offset + length - ci * m.chunk, m.chunk)
-            dst = ci * m.chunk + lo - offset
-            jobs.setdefault(f, []).append((base + lo, hi - lo, dst, ci))
+        return self.pread_many([(offset, length)])[0]
 
-        out = bytearray(length)
+    def pread_many(self, ranges: Sequence[tuple[int, int]],
+                   into: Optional[Sequence] = None):
+        """Batched positional reads.
+
+        ``ranges``: (offset, length) pairs over the logical stream; each is
+        clamped at EOF like :meth:`pread`.  Without ``into``, returns one
+        ``bytes`` per range.  With ``into`` — parallel writable buffers
+        (anything supporting the buffer protocol, e.g. numpy uint8 views) —
+        bytes land zero-copy via ``readinto`` and the per-range byte counts
+        are returned.
+
+        Raises :class:`StripeMissingError` if a physical stripe file is
+        gone or short.
+        """
+        m = self.meta
+        clamped: list[tuple[int, int]] = []
+        views: list[Optional[memoryview]] = []
+        out: list = []
+        for i, (off, ln) in enumerate(ranges):
+            ln = max(0, min(ln, m.size - off))
+            clamped.append((off, ln))
+            if into is None:
+                buf = bytearray(ln)
+                out.append(buf)
+                views.append(memoryview(buf))
+            else:
+                out.append(ln)
+                views.append(memoryview(into[i]) if ln else None)
+
+        # chunk sub-reads grouped per physical file:
+        # (file_offset, length, range_idx, dest_offset)
+        jobs: dict[int, list[tuple[int, int, int, int]]] = {}
+        for i, (off, ln) in enumerate(clamped):
+            if ln <= 0:
+                continue
+            first = off // m.chunk
+            last = (off + ln - 1) // m.chunk
+            for ci in range(first, last + 1):
+                f, base = m.locate(ci)
+                lo = max(off - ci * m.chunk, 0)
+                hi = min(off + ln - ci * m.chunk, m.chunk)
+                dst = ci * m.chunk + lo - off
+                jobs.setdefault(f, []).append((base + lo, hi - lo, i, dst))
+
+        # sort by file offset and merge file- and dest-contiguous sub-reads
+        # so full-tensor restores become a few big sequential readintos
+        for f, subs in jobs.items():
+            subs.sort()
+            merged = [subs[0]]
+            for off, ln, i, dst in subs[1:]:
+                poff, pln, pi, pdst = merged[-1]
+                if off == poff + pln and i == pi and dst == pdst + pln:
+                    merged[-1] = (poff, pln + ln, pi, pdst)
+                else:
+                    merged.append((off, ln, i, dst))
+            jobs[f] = merged
 
         def read_file(f):
             group, name = m.files[f]
             n = 0
-            with self.hdfs.open_group_file(group, name, "rb") as h:
-                for off, ln, dst, _ in jobs[f]:
+            try:
+                h = self.hdfs.open_group_file(group, name, "rb")
+            except FileNotFoundError as e:
+                raise StripeMissingError(self.path, file_index=f,
+                                         group=group, name=name) from e
+            with h:
+                for off, ln, i, dst in jobs[f]:
                     h.seek(off)
-                    out[dst:dst + ln] = h.read(ln)
+                    got = h.readinto(views[i][dst:dst + ln])
+                    if got != ln:
+                        raise StripeMissingError(
+                            self.path, file_index=f, group=group, name=name,
+                            detail=f"truncated (wanted {ln} bytes at offset "
+                                   f"{off}, got {got})")
                     n += ln
+            self.hdfs.account_read(n)
             if self.hdfs.throttle:
                 with self.hdfs.throttle:
                     self.hdfs.throttle.charge(n)
 
-        # single-file reads (sub-stripe ranges) skip the pool entirely
+        # single-file calls (sub-stripe ranges) skip the pool entirely
         if len(jobs) == 1:
             read_file(next(iter(jobs)))
-        else:
-            with ThreadPoolExecutor(min(self.threads, len(jobs))) as ex:
-                list(ex.map(read_file, jobs))
-        return bytes(out)
+        elif jobs:
+            pool = self._pool or shared_io_pool()
+            futs = [pool.submit(read_file, f) for f in jobs]
+            for fu in futs:
+                fu.result()
+        if into is None:
+            return [bytes(b) for b in out]
+        return out
 
     def read_all(self) -> bytes:
         return self.pread(0, self.meta.size)

@@ -88,7 +88,7 @@ def main():
         job_params={"arch": args.arch, "deps": ["framework==2.1"]},
         startup_reads=[("bin/python", 0, -1), ("libframework.so", 0, -1)],
         env_setup=env_setup, resume_step=resume,
-        shard_fraction=1.0 / args.nodes)
+        resume_plan="rows")
 
     rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=root / "rt",
                          optimize=not args.no_bootseer)
@@ -105,25 +105,27 @@ def main():
     model = Model(get_tiny(args.arch), rules)
     params = model.init(jax.random.key(0))
     opt = adamw_init(params)
-    start = 0
     if resume is not None:
-        params, opt = ck.restore(resume, params, opt)
-        params = jax.tree.map(jax.numpy.asarray, params)
-        opt = jax.tree.map(jax.numpy.asarray, opt)
-        start = resume
-        print(f"resumed params/opt from step {resume}")
+        print(f"resuming params/opt from step {resume} "
+              "(planned two-wave restore)")
 
     class Saver:
+        """Logs saves; delegates restore_planned etc. to the real ckpt."""
+
         def save(self, step, p, o):
             ck.save(step, p, o)
             print(f"  checkpoint @ step {step} "
                   f"({ck.load_index(step).total_bytes / 2**20:.1f} MiB, "
                   f"{'striped' if ck.striped else 'plain'})")
 
+        def __getattr__(self, name):
+            return getattr(ck, name)
+
     params, opt, hist = train_loop(
         model, batch=args.batch, seq_len=args.seq_len, steps=args.steps,
-        params=params, opt_state=opt, start_step=start,
+        params=params, opt_state=opt, resume_from=resume,
         checkpointer=Saver(), ckpt_every=args.ckpt_every)
+    rt.drain_deferred()   # surface deferred restore/stream failures
     print(f"done: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
 
 

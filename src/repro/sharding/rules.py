@@ -79,6 +79,24 @@ class Rules:
     def total_size(self) -> int:
         return self.data_size * self.model_size
 
+    @property
+    def axis_sizes(self) -> dict:
+        """{axis name: mesh size} — the form the restore planner consumes
+        (see repro.ckpt.plan.dim_slices_for_spec)."""
+        return dict(self.mesh.shape)
+
+    def coords_of_rank(self, rank: int) -> dict:
+        """Mesh coordinates of flat device ``rank`` (C order over
+        ``axis_names``): the per-axis indices a restore planner needs to
+        slice this host's shard of every checkpointed tensor."""
+        coords = {}
+        rem = int(rank)
+        for a in reversed(self.mesh.axis_names):
+            n = int(self.mesh.shape[a])
+            coords[a] = rem % n
+            rem //= n
+        return coords
+
     # ----- spec helpers -----
 
     def dp(self, n: int):

@@ -18,8 +18,21 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
                opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
                log_every: int = 10, log_fn: Callable = print,
                checkpointer=None, ckpt_every: int = 0,
-               params=None, opt_state=None, start_step: int = 0):
-    """Train on the synthetic stream.  Returns (params, opt_state, history)."""
+               params=None, opt_state=None, start_step: int = 0,
+               resume_from: Optional[int] = None, restore_specs=None,
+               restore_coords: Optional[dict] = None):
+    """Train on the synthetic stream.  Returns (params, opt_state, history).
+
+    ``resume_from``: checkpoint step to restore through the planner
+    (``checkpointer.restore_planned``) before training.  Params restore
+    first (wave 0); the optimizer state streams as an async second wave
+    that overlaps loader setup and the step-function's jit compilation
+    (driven eagerly by a discarded warmup step).  ``restore_specs``
+    optionally carries PartitionSpec trees congruent to (params, opt) for
+    sharding-aware partial restore against ``model.rules``;
+    ``restore_coords`` gives this host's mesh coordinates (default: mesh
+    position of rank 0 — on a trivial mesh that is the full extent).
+    """
     from repro.data.loader import ShardedLoader
     from repro.data.synthetic import SyntheticStream
 
@@ -29,9 +42,30 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
     if opt_state is None:
         opt_state = adamw_init(params)
 
+    opt_tail = None
+    if resume_from is not None and checkpointer is not None:
+        if restore_coords is None and restore_specs is not None:
+            restore_coords = model.rules.coords_of_rank(0)
+        params, opt_tail = checkpointer.restore_planned(
+            resume_from, params, opt_state, specs=restore_specs,
+            rules=model.rules, coords=restore_coords, async_tail=True)
+        params = jax.tree.map(jax.numpy.asarray, params)
+        start_step = resume_from
+
     step_fn = jit_train_step(model, opt_cfg, batch)
     loader = ShardedLoader(SyntheticStream(model.cfg.vocab_size, seed),
                            model.rules, batch, seq_len)
+    if opt_tail is not None and steps > 0:
+        # realize the overlap: jit is lazy, so drive the real compile with
+        # a discarded warmup step (opt_state is still the zero-initialized
+        # like tree — same shapes/dtypes, so the cache hit carries over)
+        # while the optimizer wave streams in the background.  The step
+        # donates its arguments, so warm up on a copy of the params.
+        step_fn(jax.tree.map(jax.numpy.copy, params), opt_state,
+                loader(start_step))
+    if opt_tail is not None:
+        (opt_state,) = opt_tail.result()
+        opt_state = jax.tree.map(jax.numpy.asarray, opt_state)
 
     history = []
     t0 = time.perf_counter()

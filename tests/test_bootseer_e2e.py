@@ -13,6 +13,7 @@ from repro.ckpt.checkpoint import Checkpointer
 from repro.core.bootseer import BootseerRuntime, JobSpec
 from repro.core.stages import Stage
 from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+from repro.dfs.striped import StripeMissingError
 
 BS = 64 * 1024
 
@@ -46,7 +47,7 @@ def _spec(n=3):
         job_id="trainjob", image="img", num_nodes=n,
         job_params={"deps": ["a==1"], "gpu": "H800"},
         startup_reads=[("bin/start", 0, -1)],
-        env_setup=env_setup, resume_step=100, shard_fraction=1 / n)
+        env_setup=env_setup, resume_step=100, resume_plan="rows")
 
 
 def test_baseline_vs_bootseer_startup(env, tmp_path):
@@ -74,6 +75,27 @@ def test_baseline_vs_bootseer_startup(env, tmp_path):
         for node_stages in res.node_stage_s.values():
             for st in (Stage.IMAGE_LOAD, Stage.ENV_SETUP, Stage.MODEL_INIT):
                 assert st.value in node_stages
+
+
+def test_deferred_opt_wave_failure_surfaces(env, tmp_path):
+    """A stripe file lost between the params wave and the deferred
+    optimizer-state wave must fail loudly via drain_deferred(), not
+    vanish into the background pool."""
+    _, reg, hdfs, ck = env
+    params = {"w": np.arange(256 * 1024, dtype=np.float32).reshape(256, -1)}
+    opt = {"mu": {"w": np.ones((1024, 1024), np.float32)},
+           "nu": {"w": np.ones((1024, 1024), np.float32)}}
+    ck.save(200, params, opt)         # 9 MiB: wave 1 reaches stripe file 2
+    files = hdfs.attrs(ck.data_path(200))["striped"]["files"]
+    group, name = files[2]            # holds optimizer-state bytes only
+    (hdfs.root / f"group{group:02d}" / name).unlink()
+
+    rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=tmp_path / "wd",
+                         optimize=True)
+    spec = JobSpec(**{**_spec().__dict__, "resume_step": 200})
+    rt.run_startup(spec, checkpointer=ck)    # params wave reads fine
+    with pytest.raises(StripeMissingError):
+        rt.drain_deferred()
 
 
 def test_hot_record_created_once(env, tmp_path):

@@ -54,6 +54,47 @@ def test_sharded_partial_restore_reads_only_rows(hdfs):
                                   np.asarray(params["w"][32:48]))
 
 
+@pytest.mark.parametrize("striped", [True, False])
+def test_roundtrip_matrix(hdfs, striped):
+    """Multi-tree save/restore across dtypes, scalars and empty arrays —
+    not just the happy-path float shapes."""
+    params = {
+        "f32": jnp.arange(60, dtype=jnp.float32).reshape(12, 5),
+        "bf16": (jnp.arange(33, dtype=jnp.float32) / 7).astype(jnp.bfloat16),
+        "i32": jnp.arange(-12, 12, dtype=jnp.int32).reshape(2, 3, 4),
+        "scalar": jnp.float32(3.5),
+        "iscalar": jnp.int32(-7),
+        "empty": jnp.zeros((0, 4), jnp.float32),
+    }
+    opt = {"mu": jax.tree.map(lambda x: x * 0, params),
+           "step": jnp.int32(11)}
+    extra = {"count": jnp.arange(3, dtype=jnp.int32)}
+    ck = Checkpointer(hdfs, striped=striped, width=4)
+    ck.save(9, params, opt, extra)
+    p2, o2, e2 = ck.restore(9, params, opt, extra)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2["step"]) == 11
+    assert o2["mu"]["empty"].shape == (0, 4)
+    np.testing.assert_array_equal(np.asarray(e2["count"]),
+                                  np.asarray(extra["count"]))
+
+
+def test_zero_row_shard_slice(hdfs):
+    """A host whose shard is empty (0 rows) restores a (0, ...) leaf and
+    reads no tensor bytes."""
+    ck = Checkpointer(hdfs, width=4)
+    params = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)}
+    ck.save(2, params)
+    index_bytes = hdfs.size(ck.index_path(2))
+    hdfs.reset_counters()
+    (r,) = ck.restore(2, params, shard_slices={"t0['w']": (16, 0)})
+    assert r["w"].shape == (0, 8)
+    assert r["w"].dtype == np.float32
+    assert hdfs.read_bytes == index_bytes  # only the manifest was read
+
+
 def test_latest_step_and_listing(hdfs):
     ck = Checkpointer(hdfs, width=2)
     assert ck.latest_step() is None
@@ -61,6 +102,26 @@ def test_latest_step_and_listing(hdfs):
         ck.save(s, {"x": jnp.zeros(4)})
     assert ck.steps() == [10, 20, 30]
     assert ck.latest_step() == 30
+
+
+def test_train_loop_resume_through_planner(hdfs, rules):
+    """train_loop(resume_from=...) restores params + async opt wave via
+    the planner (specs plumbed with default host coords) and continues."""
+    from repro.configs import get_tiny
+    from repro.models.model import Model
+    from repro.optim.adamw import adamw_init
+    from repro.train.loop import train_loop
+    model = Model(get_tiny("qwen2.5-3b"), rules)
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    ck = Checkpointer(hdfs, width=4)
+    ck.save(4, params, opt)
+    specs = (model.rules.param_specs(model.cfg), None)
+    p2, o2, hist = train_loop(model, batch=2, seq_len=16, steps=2,
+                              log_fn=lambda *_: None, checkpointer=ck,
+                              resume_from=4, restore_specs=specs)
+    assert hist[0]["step"] == 4
+    assert jax.tree.structure(o2) == jax.tree.structure(opt)
 
 
 def test_restore_into_model_params(hdfs, rules):

@@ -5,7 +5,8 @@ import pytest
 
 from repro.dfs.fuse import HdfsFuseMount
 from repro.dfs.hdfs import HdfsCluster, ThrottleModel
-from repro.dfs.striped import StripedMeta, StripedReader, write_striped
+from repro.dfs.striped import (StripedMeta, StripedReader,
+                               StripeMissingError, write_striped)
 
 
 @pytest.fixture()
@@ -92,6 +93,68 @@ class TestStripedLayout:
         write_striped(hdfs, "/ck", data, width=4)
         h2 = HdfsCluster(tmp_path / "hdfs", num_groups=8)
         assert StripedReader(h2, "/ck").read_all() == data
+
+
+class TestPreadMany:
+    """Batched ranged reads — the restore planner's read engine."""
+
+    def _file(self, hdfs, n=6 * (1 << 20) + 123, width=4):
+        data = _payload(n)
+        write_striped(hdfs, "/ck", data, width=width)
+        return data, StripedReader(hdfs, "/ck")
+
+    def test_matches_pread_and_slicing(self, hdfs):
+        data, r = self._file(hdfs)
+        ranges = [(0, 100), ((1 << 20) - 10, 20), (3 * (1 << 20), 2 << 20),
+                  (len(data) - 5, 50), (len(data) + 10, 5), (17, 0)]
+        got = r.pread_many(ranges)
+        assert got == [data[o:o + ln] for o, ln in ranges]
+        assert got == [r.pread(o, ln) for o, ln in ranges]
+        whole = r.read_all()
+        assert got == [whole[o:o + ln] for o, ln in ranges]
+
+    def test_into_buffers(self, hdfs):
+        data, r = self._file(hdfs)
+        ranges = [(5, 1000), (2 << 20, 1 << 20), (len(data) - 7, 100)]
+        bufs = [np.zeros(ln, np.uint8) for _, ln in ranges]
+        counts = r.pread_many(ranges, into=bufs)
+        assert counts == [1000, 1 << 20, 7]
+        for (o, ln), buf, c in zip(ranges, bufs, counts):
+            assert bytes(buf[:c]) == data[o:o + c]
+
+    def test_opens_each_file_at_most_once(self, hdfs, monkeypatch):
+        data, r = self._file(hdfs, n=20 * (1 << 20), width=4)
+        opened = []
+        orig = hdfs.open_group_file
+
+        def spy(group, name, mode="rb"):
+            opened.append((group, name))
+            return orig(group, name, mode)
+
+        monkeypatch.setattr(hdfs, "open_group_file", spy)
+        # many small ranges spread over every stripe file
+        ranges = [(i * (1 << 20) + 17, 64) for i in range(20)]
+        got = r.pread_many(ranges)
+        assert got == [data[o:o + ln] for o, ln in ranges]
+        assert len(opened) == len(set(opened))        # each file once
+        assert len(set(opened)) <= r.meta.width
+
+    def test_read_accounting(self, hdfs):
+        data, r = self._file(hdfs)
+        hdfs.reset_counters()
+        r.pread_many([(0, 1000), (1 << 20, 500)])
+        assert hdfs.read_bytes == 1500
+
+    def test_missing_stripe_file_raises(self, hdfs):
+        data, r = self._file(hdfs, n=20 * (1 << 20), width=4)
+        group, name = r.meta.files[2]
+        (hdfs.root / f"group{group:02d}" / name).unlink()
+        with pytest.raises(StripeMissingError) as ei:
+            r.read_all()
+        assert name in str(ei.value)
+        assert f"group {group}" in str(ei.value)
+        # ranges not touching the dead file still work
+        assert r.pread(0, 100) == data[:100]
 
 
 class TestFuse:

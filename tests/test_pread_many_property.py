@@ -1,0 +1,59 @@
+"""Property test (hypothesis): ``StripedReader.pread_many`` is byte-for-byte
+equivalent to a sequence of ``pread`` calls and to slicing ``read_all``,
+over random (offset, length) range sets, stripe widths and chunk/stripe
+sizes — including EOF clamping, zero-length ranges and the ``into``
+zero-copy path."""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.dfs.hdfs import HdfsCluster  # noqa: E402
+from repro.dfs.striped import StripedReader, write_striped  # noqa: E402
+
+SET = dict(deadline=None, max_examples=30,
+           suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+@settings(**SET)
+@given(
+    width=st.integers(1, 5),
+    chunk_pow=st.integers(8, 12),          # 256 B .. 4 KiB chunks
+    spc=st.integers(1, 4),                 # chunks per stripe unit
+    size=st.integers(0, 50_000),
+    seed=st.integers(0, 2**16),
+    ranges=st.lists(
+        st.tuples(st.integers(0, 60_000), st.integers(0, 9_000)),
+        min_size=0, max_size=12),
+)
+def test_pread_many_equals_pread_and_read_all(width, chunk_pow, spc, size,
+                                              seed, ranges):
+    chunk = 1 << chunk_pow
+    data = np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+    with tempfile.TemporaryDirectory() as d:
+        hdfs = HdfsCluster(Path(d), num_groups=8)
+        write_striped(hdfs, "/f", data, width=width, chunk=chunk,
+                      stripe=chunk * spc)
+        r = StripedReader(hdfs, "/f")
+
+        got = r.pread_many(ranges)
+        assert got == [data[o:o + ln] for o, ln in ranges]
+        assert got == [r.pread(o, ln) for o, ln in ranges]
+        whole = r.read_all()
+        assert whole == data
+        assert got == [whole[o:o + ln] for o, ln in ranges]
+
+        # zero-copy path: same bytes, correct per-range counts
+        bufs = [np.zeros(ln, np.uint8) for _, ln in ranges]
+        counts = r.pread_many(ranges, into=bufs)
+        for (o, ln), buf, c, expect in zip(ranges, bufs, counts, got):
+            assert c == len(expect)
+            assert bytes(buf[:c]) == expect

@@ -72,7 +72,7 @@ def test_full_job_lifecycle(cluster, rules):
 
     # --- "crash" -> warm restart with resume ---
     spec2 = JobSpec(**{**spec.__dict__, "resume_step": 12,
-                       "shard_fraction": 1 / 3})
+                       "resume_plan": "rows"})
     r2 = rt.run_startup(spec2, checkpointer=ck)
     assert r2.notes["prefetch_used"]
 
