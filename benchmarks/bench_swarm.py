@@ -1,0 +1,140 @@
+"""§4.2 swarm benchmark — topology-aware block distribution vs naive
+per-node registry pulls, across 8-256 simulated nodes x 1-4 concurrent
+jobs.
+
+Each cell cold-starts ``jobs`` distinct images on ``nodes`` simulated
+nodes (one LazyImageClient per job x node, all sharing one Swarm) and
+reports: registry egress bytes vs the unique-block floor (the swarm
+keeps the ratio ~1.0; naive pulls would pay ``nodes``x), p50/p99 node
+warm time, and peer-link utilization split by rack tier.  Byte counts
+are deterministic (Registry accounting); wall times depend on the box.
+
+    PYTHONPATH=src python benchmarks/bench_swarm.py --json bench.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+
+from repro.blockstore.image import build_image
+from repro.blockstore.lazy import LazyImageClient
+from repro.blockstore.registry import Registry
+from repro.blockstore.swarm import Swarm, Topology
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:  # script mode: put the repo root on sys.path
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import emit
+
+
+def _cell(nodes: int, jobs: int, *, blocks: int, block_kib: int,
+          nodes_per_rack: int, threads: int) -> dict:
+    bs = block_kib * 1024
+    rng = np.random.default_rng((nodes, jobs))
+    with tempfile.TemporaryDirectory() as d:
+        tmp = Path(d)
+        reg = Registry(tmp / "reg")
+        manifests = []
+        for j in range(jobs):
+            src = tmp / f"src{j}"
+            src.mkdir()
+            (src / "app.bin").write_bytes(
+                rng.integers(0, 256, blocks * bs, dtype=np.uint8)
+                .tobytes())
+            manifests.append(build_image(src, reg, f"img{j}",
+                                         block_size=bs))
+        unique = sum(m.unique_block_bytes for m in manifests)
+        swarm = Swarm(Topology(nodes_per_rack=nodes_per_rack))
+        tasks = [(j, i) for j in range(jobs) for i in range(nodes)]
+
+        warm_s = {}
+
+        def cold_start(task):
+            j, i = task
+            man = manifests[j]
+            c = LazyImageClient(
+                man, reg, tmp / f"j{j}n{i}", node_id=f"node{i:04d}",
+                peers=swarm, client_id=f"job{j}/n{i}")
+            t0 = time.perf_counter()
+            for h in swarm.rarest_first(sorted(man.unique_blocks)):
+                c.ensure_block(h)
+            warm_s[(j, i)] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(min(threads, len(tasks))) as ex:
+            list(ex.map(cold_start, tasks))
+        wall = time.perf_counter() - t0
+
+        egress = reg.stats["bytes_served"]
+        times = sorted(warm_s.values())
+        peer_bytes = {k: v["bytes"] for k, v in swarm.link_stats.items()}
+        total_peer = sum(peer_bytes.values())
+        return {
+            "nodes": nodes, "jobs": jobs,
+            "unique_bytes": unique,
+            "registry_egress_bytes": egress,
+            "egress_ratio": round(egress / max(unique, 1), 4),
+            "naive_egress_bytes": nodes * unique,
+            "warm_s_p50": round(float(np.percentile(times, 50)), 4),
+            "warm_s_p99": round(float(np.percentile(times, 99)), 4),
+            "wall_s": round(wall, 4),
+            "peer_link_bytes": peer_bytes,
+            "intra_rack_fraction": round(
+                peer_bytes["intra_rack"] / max(total_peer, 1), 4),
+            "coalesced_fetches": swarm.coalesced_fetches,
+            "rearmed_fetches": swarm.rearmed_fetches,
+        }
+
+
+def run(nodes=(8, 32, 64, 128, 256), jobs=(1, 4), *, blocks: int = 24,
+        block_kib: int = 16, nodes_per_rack: int = 8, threads: int = 32,
+        json_path=None):
+    report = {"blocks_per_image": blocks, "block_kib": block_kib,
+              "nodes_per_rack": nodes_per_rack, "cells": []}
+    rows = []
+    for j in jobs:
+        for n in nodes:
+            cell = _cell(n, j, blocks=blocks, block_kib=block_kib,
+                         nodes_per_rack=nodes_per_rack, threads=threads)
+            report["cells"].append(cell)
+            rows.append((
+                f"swarm.egress_ratio.n{n}_j{j}",
+                cell["egress_ratio"],
+                f"naive {n}x; warm p50 {cell['warm_s_p50']}s "
+                f"p99 {cell['warm_s_p99']}s, "
+                f"intra-rack {cell['intra_rack_fraction']:.0%}"))
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+    emit(rows, f"Swarm image distribution (nodes {list(nodes)} x jobs "
+               f"{list(jobs)}, {blocks}x{block_kib}KiB blocks/image)")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, nargs="*",
+                    default=[8, 32, 64, 128, 256])
+    ap.add_argument("--jobs", type=int, nargs="*", default=[1, 4])
+    ap.add_argument("--blocks", type=int, default=24)
+    ap.add_argument("--block-kib", type=int, default=16)
+    ap.add_argument("--nodes-per-rack", type=int, default=8)
+    ap.add_argument("--threads", type=int, default=32)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    run(nodes=tuple(args.nodes), jobs=tuple(args.jobs),
+        blocks=args.blocks, block_kib=args.block_kib,
+        nodes_per_rack=args.nodes_per_rack, threads=args.threads,
+        json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

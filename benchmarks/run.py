@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.fig14_env_straggler",
     "benchmarks.bench_striped_io",
     "benchmarks.bench_resume",
+    "benchmarks.bench_swarm",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
     "benchmarks.beyond_paper",

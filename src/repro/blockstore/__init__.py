@@ -3,3 +3,4 @@ from repro.blockstore.registry import Registry  # noqa: F401
 from repro.blockstore.lazy import LazyImageClient  # noqa: F401
 from repro.blockstore.prefetch import HotBlockService, prefetch_image  # noqa: F401
 from repro.blockstore.p2p import PeerGroup  # noqa: F401
+from repro.blockstore.swarm import Swarm, Topology  # noqa: F401

@@ -53,6 +53,24 @@ class ImageManifest:
             out.update(f.blocks)
         return out
 
+    def block_sizes(self) -> dict:
+        """hash -> payload bytes (a file's last block may be partial;
+        identical hashes are identical content, so collisions agree)."""
+        out: dict[str, int] = {}
+        for f in self.files:
+            for i, h in enumerate(f.blocks):
+                if i == len(f.blocks) - 1:
+                    out[h] = f.size - i * self.block_size
+                else:
+                    out[h] = self.block_size
+        return out
+
+    @property
+    def unique_block_bytes(self) -> int:
+        """Total payload of the deduplicated block set — the floor on
+        registry egress for one cold image distribution."""
+        return sum(self.block_sizes().values())
+
     def file_map(self) -> dict:
         return {f.path: f for f in self.files}
 

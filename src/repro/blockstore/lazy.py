@@ -1,14 +1,20 @@
 """Lazy (on-demand) image client with access-trace recording.
 
 Models the container runtime's page-fault-style data path: file reads hit
-the local block cache; misses fetch the block from a peer (if a PeerGroup is
-attached) or the registry.  Every first access is recorded — (file, block
-index, monotonic order) — which is exactly the trace the record-and-prefetch
-service (repro.blockstore.prefetch) persists per image digest.
+the local block cache; misses fetch the block from a peer (if a Swarm /
+PeerGroup is attached) or the registry.  Every first access is recorded —
+(file, block index, monotonic order) — which is exactly the trace the
+record-and-prefetch service (repro.blockstore.prefetch) persists per image
+digest.
+
+A node may run several clients at once (concurrent jobs, multiple images):
+each client carries a swarm-unique ``client_id`` (node + image digest by
+default) so per-peer accounting and membership never collide.
 """
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from pathlib import Path
@@ -21,12 +27,15 @@ from repro.blockstore.registry import Registry
 class LazyImageClient:
     def __init__(self, manifest: ImageManifest, registry: Registry,
                  cache_dir: str | Path, *, node_id: str = "node0",
-                 peers: Optional["PeerGroup"] = None):
+                 peers: Optional["Swarm"] = None,
+                 client_id: Optional[str] = None,
+                 peer_replace: bool = False):
         self.manifest = manifest
         self.registry = registry
         self.cache_dir = Path(cache_dir)
         self.cache_dir.mkdir(parents=True, exist_ok=True)
         self.node_id = node_id
+        self.client_id = client_id or f"{node_id}:{manifest.digest[:8]}"
         self.peers = peers
         self._files = manifest.file_map()
         self._lock = threading.Lock()
@@ -35,7 +44,7 @@ class LazyImageClient:
         self.stats = {"hits": 0, "misses": 0, "peer_fetches": 0,
                       "registry_fetches": 0, "bytes_fetched": 0}
         if peers is not None:
-            peers.join(self)
+            peers.join(self, replace=peer_replace)
 
     # ----- block cache -----
 
@@ -48,6 +57,12 @@ class LazyImageClient:
     def get_cached_block(self, h: str) -> bytes:
         return self._cache_path(h).read_bytes()
 
+    def cached_hashes(self) -> list[str]:
+        """Block hashes already on local disk (warm-cache announcement)."""
+        return [p.name for p in self.cache_dir.iterdir()
+                if len(p.name) == 64
+                and all(c in "0123456789abcdef" for c in p.name)]
+
     def _fetch_block(self, h: str) -> bytes:
         """Peer-first fetch with registry fallback."""
         if self.peers is not None:
@@ -55,32 +70,48 @@ class LazyImageClient:
             if data is not None:
                 self.stats["peer_fetches"] += 1
                 self._store(h, data)
+                # announce: this client is now a holder too, so the
+                # dissemination tree fans out instead of pinning the seed
+                self.peers.publish(h, self)
                 return data
             if self.has_block(h):
                 # another thread of THIS client was the fetcher-of-record
                 # while we were parked: the block is already on local disk
-                # (publish clears any in-flight marker we might own)
-                self.peers.publish(h)
+                # (publish announces it and clears any marker we re-armed)
+                self.peers.publish(h, self)
                 self.stats["hits"] += 1
                 return self.get_cached_block(h)
         try:
             data = self.registry.get_block(h)
-            self.stats["registry_fetches"] += 1
-            self._store(h, data)
-        finally:
+        except BaseException:
             if self.peers is not None:
                 # we may be the fetcher-of-record: wake coalesced waiters
-                # (on failure too, so they fall back to the registry)
-                self.peers.publish(h)
+                # so exactly one re-arms and retries the registry
+                self.peers.abandon(h, self)
+            raise
+        self.stats["registry_fetches"] += 1
+        self._store(h, data)
+        if self.peers is not None:
+            self.peers.publish(h, self)
         return data
 
-    def _store(self, h: str, data: bytes):
-        self.stats["bytes_fetched"] += len(data)
+    def _store(self, h: str, data: bytes) -> bool:
+        """Write ``data`` to the local cache; returns whether this call
+        actually stored it.  Bytes are only counted when written — a lost
+        race with a concurrent fetcher is not a fetch."""
         p = self._cache_path(h)
-        if not p.exists():
-            tmp = p.with_suffix(".tmp" + self.node_id)
-            tmp.write_bytes(data)
-            tmp.replace(p)
+        if p.exists():
+            return False
+        tmp = p.with_suffix(f".tmp{threading.get_ident():x}")
+        tmp.write_bytes(data)
+        try:
+            os.link(tmp, p)       # atomic publish; loser keeps p intact
+        except FileExistsError:
+            return False
+        finally:
+            tmp.unlink(missing_ok=True)
+        self.stats["bytes_fetched"] += len(data)
+        return True
 
     def ensure_block(self, h: str, *, record: bool = False,
                      file_path: str = "", block_idx: int = -1) -> bytes:

@@ -1,82 +1,29 @@
 """Peer-to-peer block sharing between a job's worker nodes (§4.2).
 
-Multiple machines pulling the same image concurrently fetch blocks from
-peers that already hold them instead of hammering the registry; this spreads
-the bandwidth load across links and removes the registry as the single
-contended source (§3.4's throttling failure mode).
+The engine lives in :mod:`repro.blockstore.swarm`; this module keeps the
+original ``PeerGroup`` name as a single-tier configuration of it.  Two seed
+bugs died in the rebuild:
 
-Concurrent requests for the SAME block are coalesced (singleflight): the
-first requester becomes the fetcher-of-record and goes to the registry;
-everyone else parks on an event and is served peer-to-peer once the fetcher
-publishes the block.  N nodes cold-starting an image therefore cost ONE
-registry fetch per block, not N.
+* waiters whose wait timed out (or whose fetcher-of-record failed) used to
+  fall back to the registry with no singleflight marker — N-1 nodes
+  stampeded the source after one slow fetch.  ``Swarm.fetch`` re-arms the
+  in-flight marker on fallback (one waiter takes over; retries capped).
+* per-peer accounting was keyed by ``node_id``, so two clients on one node
+  (multi-image startups) silently clobbered each other's served-bytes
+  stats and skewed least-loaded peer selection.  Stats are now keyed by
+  client identity and duplicate identities are rejected.
 """
 
 from __future__ import annotations
 
-import threading
-from typing import Optional
+from repro.blockstore.swarm import Swarm, Topology
 
 
-class PeerGroup:
+class PeerGroup(Swarm):
+    """A flat (single-rack) swarm — the seed API, swarm semantics."""
+
     def __init__(self, per_peer_throttle=None):
-        self._peers: list = []
-        self._lock = threading.Lock()
-        self._in_flight: dict[str, threading.Event] = {}
+        super().__init__(
+            Topology(rack_fn=lambda node_id: "rack0"),
+            intra_rack=per_peer_throttle)
         self.per_peer_throttle = per_peer_throttle
-        self.stats: dict[str, dict] = {}
-        self.coalesced_fetches = 0
-
-    def join(self, client):
-        with self._lock:
-            self._peers.append(client)
-            self.stats[client.node_id] = {"blocks_served": 0,
-                                          "bytes_served": 0}
-
-    def _serve_from(self, candidates, h: str) -> bytes:
-        # pick the least-loaded peer — spreads load across links
-        peer = min(candidates,
-                   key=lambda p: self.stats[p.node_id]["bytes_served"])
-        data = peer.get_cached_block(h)
-        if self.per_peer_throttle:
-            with self.per_peer_throttle:
-                self.per_peer_throttle.charge(len(data))
-        with self._lock:
-            self.stats[peer.node_id]["blocks_served"] += 1
-            self.stats[peer.node_id]["bytes_served"] += len(data)
-        return data
-
-    def fetch(self, h: str, requester) -> Optional[bytes]:
-        """Block payload from a peer, or None when the caller must fetch it
-        from the registry itself (it is then the fetcher-of-record and MUST
-        call :meth:`publish` once the block is stored locally)."""
-        with self._lock:
-            candidates = [p for p in self._peers
-                          if p is not requester and p.has_block(h)]
-            ev = None
-            if not candidates:
-                ev = self._in_flight.get(h)
-                if ev is None:
-                    # caller becomes the fetcher-of-record
-                    self._in_flight[h] = threading.Event()
-                    return None
-                self.coalesced_fetches += 1
-        if candidates:
-            return self._serve_from(candidates, h)
-        # another node is already fetching this block: wait, then retry the
-        # peer path once (fall back to the registry if it failed/timed out)
-        ev.wait(timeout=10.0)
-        with self._lock:
-            candidates = [p for p in self._peers
-                          if p is not requester and p.has_block(h)]
-        if candidates:
-            return self._serve_from(candidates, h)
-        return None
-
-    def publish(self, h: str):
-        """Mark ``h`` locally available on the fetcher-of-record; wakes any
-        coalesced waiters so they can fetch it peer-to-peer."""
-        with self._lock:
-            ev = self._in_flight.pop(h, None)
-        if ev is not None:
-            ev.set()

@@ -8,6 +8,14 @@ Prefetch phase: subsequent startups fetch exactly the recorded hot blocks
 *before* container start (parallel, peer-assisted), then stream the cold
 remainder in the background (the paper uses 8 threads) so training never
 faults to a remote source.
+
+Traces EVOLVE across runs: each new record decays the stored per-block
+scores by ``decay`` and adds 1.0 for every block the new trace touched, so
+the hot set tracks changing entrypoints — a block the startup stops
+touching fades below ``min_score`` after a few runs and is evicted, while a
+newly-hot block enters immediately.  ``hot_blocks`` stays in first-touch
+order (the startup's critical order); the swarm streams the *cold*
+remainder rarest-first for dissemination diversity.
 """
 
 from __future__ import annotations
@@ -23,11 +31,23 @@ from repro.blockstore.lazy import LazyImageClient
 
 
 class HotBlockService:
-    """Central record store: image digest -> hot block trace."""
+    """Central record store: image digest -> evolving hot block scores.
 
-    def __init__(self, root: str | Path):
+    ``decay``: multiplier applied to every stored score when a new trace
+    merges in (0 < decay < 1; at 0.5 a once-hot block untouched for 3
+    runs decays 1.0 -> 0.125, below the default ``min_score``, and is
+    evicted).
+    ``min_score``: eviction threshold after each merge.
+    """
+
+    def __init__(self, root: str | Path, *, decay: float = 0.5,
+                 min_score: float = 0.2):
+        if not 0.0 < decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.decay = decay
+        self.min_score = min_score
 
     def _path(self, digest: str) -> Path:
         return self.root / f"{digest}.trace.json"
@@ -35,18 +55,54 @@ class HotBlockService:
     def has_record(self, digest: str) -> bool:
         return self._path(digest).exists()
 
+    def _load(self, digest: str) -> dict:
+        """Stored state as {"runs": int, "blocks": {hash: entry}} where an
+        entry is {"score", "t", "file", "block"}.  Reads both the current
+        format and the seed's flat trace-list format."""
+        if not self.has_record(digest):
+            return {"runs": 0, "blocks": {}}
+        raw = json.loads(self._path(digest).read_text())
+        if isinstance(raw, list):  # seed format: one flat trace
+            return {"runs": 1, "blocks": {
+                r["hash"]: {"score": 1.0, "t": r.get("t", 0.0),
+                            "file": r.get("file", ""),
+                            "block": r.get("block", -1)} for r in raw}}
+        return raw
+
     def record(self, digest: str, trace: list[dict],
                window_s: Optional[float] = None):
-        """Persist the hot-block trace (optionally cut to a record window —
-        the paper uses a 2-minute window)."""
+        """Merge one run's hot-block trace into the stored record
+        (optionally cut to a record window — the paper uses 2 minutes)."""
         if window_s is not None:
             trace = [r for r in trace if r["t"] <= window_s]
-        self._path(digest).write_text(json.dumps(trace))
+        state = self._load(digest)
+        blocks = state["blocks"]
+        for e in blocks.values():
+            e["score"] *= self.decay
+        for r in trace:
+            e = blocks.get(r["hash"])
+            if e is None:
+                blocks[r["hash"]] = {"score": 1.0, "t": r["t"],
+                                     "file": r.get("file", ""),
+                                     "block": r.get("block", -1)}
+            else:
+                e["score"] += 1.0
+                e["t"] = r["t"]       # refresh first-touch order
+        state["blocks"] = {h: e for h, e in blocks.items()
+                           if e["score"] >= self.min_score}
+        state["runs"] = state.get("runs", 0) + 1
+        tmp = self._path(digest).with_suffix(".tmp")
+        tmp.write_text(json.dumps(state))
+        tmp.replace(self._path(digest))
 
     def hot_blocks(self, digest: str) -> list[str]:
-        if not self.has_record(digest):
-            return []
-        return [r["hash"] for r in json.loads(self._path(digest).read_text())]
+        """Current hot set in first-touch order of the latest traces."""
+        blocks = self._load(digest)["blocks"]
+        return sorted(blocks, key=lambda h: blocks[h]["t"])
+
+    def scores(self, digest: str) -> dict[str, float]:
+        return {h: e["score"]
+                for h, e in self._load(digest)["blocks"].items()}
 
 
 def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
@@ -67,6 +123,9 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
     ``cold_handle`` is a callable the caller runs once startup is over (the
     runtime submits it to its I/O pool while training runs, as in §4.2).
     Otherwise ``cold_handle`` is the background thread (or None).
+
+    Hot blocks stream in recorded first-touch order (startup-critical);
+    cold blocks stream rarest-first when the client is swarm-attached.
     """
     digest = client.manifest.digest
     hot = [h for h in service.hot_blocks(digest) if not client.has_block(h)]
@@ -83,6 +142,10 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
     hot_s = time.perf_counter() - t0
     hot_set = set(hot)
 
+    def cold_order(hashes):
+        rarest = getattr(client.peers, "rarest_first", None)
+        return rarest(hashes) if rarest is not None else list(hashes)
+
     if defer_cold:
         # a marker in the block cache records that a full stream already
         # completed for this digest, so warm restarts skip the whole
@@ -92,9 +155,10 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
             return hot_s, None
 
         def stream_later():
-            for h in client.manifest.unique_blocks:
-                if h not in hot_set and not client.has_block(h):
-                    client.ensure_block(h)
+            todo = [h for h in client.manifest.unique_blocks
+                    if h not in hot_set and not client.has_block(h)]
+            for h in cold_order(todo):
+                client.ensure_block(h)
             marker.touch()
         return hot_s, stream_later
 
@@ -103,11 +167,14 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
     bg = None
     if cold:
         def stream():
+            # rarest-first ordering scans the availability index once per
+            # block — do it on the streaming side, never on the critical
+            # path between the hot phase and returning to the caller
             if pool is not None:
-                list(pool.map(client.ensure_block, cold))
+                list(pool.map(client.ensure_block, cold_order(cold)))
             else:
                 with ThreadPoolExecutor(min(cold_threads, len(cold))) as ex:
-                    list(ex.map(client.ensure_block, cold))
+                    list(ex.map(client.ensure_block, cold_order(cold)))
         if background_cold:
             bg = threading.Thread(target=stream, daemon=True)
             bg.start()

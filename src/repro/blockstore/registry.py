@@ -23,7 +23,9 @@ class Registry:
         (self.root / "manifests").mkdir(parents=True, exist_ok=True)
         self.throttle = throttle
         self._lock = threading.Lock()
-        self.stats = {"block_requests": 0, "bytes_served": 0}
+        self.stats = {"block_requests": 0, "bytes_served": 0,
+                      "unique_blocks_served": 0}
+        self._served_hashes: set[str] = set()
 
     def _block_path(self, h: str) -> Path:
         d = self.root / "blocks" / h[:2]
@@ -44,6 +46,9 @@ class Registry:
         with self._lock:
             self.stats["block_requests"] += 1
             self.stats["bytes_served"] += len(data)
+            if h not in self._served_hashes:
+                self._served_hashes.add(h)
+                self.stats["unique_blocks_served"] += 1
         if self.throttle:
             with self.throttle:
                 self.throttle.charge(len(data))

@@ -1,0 +1,320 @@
+"""Swarm-scale peer-to-peer block distribution (§4.2 at cluster scale).
+
+The seed ``PeerGroup`` scanned every peer under one global lock and assumed
+one job pulling one image — exactly the shape that collapses back into the
+§3.4 registry stampede at 1,000+ concurrent pulls.  This module replaces it
+with a topology-aware swarm:
+
+* **Sharded availability index** — block hash -> holder set, spread over
+  lock stripes: index lookups and singleflight markers never take a
+  global lock and never scan the peer list (per-serve load accounting
+  uses a small dedicated stats lock, off the index path).
+* **Singleflight with re-arm** — concurrent requests for one block coalesce
+  behind a fetcher-of-record; if that fetcher fails or stalls, exactly ONE
+  waiter re-arms the in-flight marker and takes over (the rest keep
+  waiting), so a failure costs one extra registry fetch, not N-1.
+* **Bounded dissemination tree** — each holder serves at most
+  ``serve_slots`` concurrent uploads.  Waiters woken by a publish fan out
+  over the (growing) holder set, so a cold block reaches N nodes through a
+  tree of bounded degree: registry egress is O(unique blocks), per-peer
+  upload load is O(serve_slots).
+* **Rack/node tiers** — a :class:`Topology` maps nodes to racks; serving
+  prefers same-rack holders and per-link :class:`ThrottleModel`s meter
+  intra-rack vs cross-rack traffic separately.
+* **Many jobs / images per node** — membership and accounting are keyed by
+  *client identity* (node + image digest), not node id, and blocks are
+  content-addressed, so concurrent jobs share one swarm (and dedup blocks
+  across images) without clobbering each other's stats.
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+
+def _client_id(client) -> str:
+    cid = getattr(client, "client_id", None)
+    return cid if cid is not None else client.node_id
+
+
+@dataclass
+class Topology:
+    """Node -> rack mapping with an overridable assignment rule.
+
+    ``racks`` pins specific node ids; otherwise the trailing integer of
+    the node id (``node0042`` -> 42) is grouped ``nodes_per_rack`` at a
+    time.  Node ids without a trailing integer hash deterministically
+    into ``hash_racks`` buckets — a coarse default that keeps rack
+    locality meaningful; deployments with non-numeric naming should pass
+    ``racks`` or ``rack_fn`` for their real topology.
+    """
+
+    nodes_per_rack: int = 8
+    racks: dict = field(default_factory=dict)      # node_id -> rack name
+    rack_fn: Optional[Callable[[str], str]] = None
+    hash_racks: int = 16
+
+    def rack_of(self, node_id: str) -> str:
+        if node_id in self.racks:
+            return self.racks[node_id]
+        if self.rack_fn is not None:
+            return self.rack_fn(node_id)
+        digits = ""
+        for ch in reversed(node_id):
+            if ch.isdigit():
+                digits = ch + digits
+            elif digits:
+                break
+        if digits:
+            return f"rack{int(digits) // max(self.nodes_per_rack, 1)}"
+        return f"rack{zlib.crc32(node_id.encode()) % self.hash_racks}"
+
+
+class _Flight:
+    __slots__ = ("event", "owner")
+
+    def __init__(self, owner: str):
+        self.event = threading.Event()
+        self.owner = owner
+
+
+class _Shard:
+    __slots__ = ("lock", "holders", "inflight")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.holders: dict[str, set[str]] = {}   # block hash -> client ids
+        self.inflight: dict[str, _Flight] = {}
+
+
+class Swarm:
+    """Topology-aware block swarm shared by many jobs and images.
+
+    Parameters
+    ----------
+    topology: rack/node tier map (defaults to one flat rack group per 8
+        nodes).
+    serve_slots: max concurrent uploads per holder — the dissemination
+        tree's fan-out bound.
+    wait_timeout / max_wait_rounds: how long a coalesced waiter parks per
+        round and how many rounds before it gives up and goes to the
+        registry itself (the capped worst case).
+    nshards: lock stripes for the availability index.
+    intra_rack / cross_rack: optional ``ThrottleModel``s charged per served
+        block on the corresponding link tier.
+    """
+
+    def __init__(self, topology: Optional[Topology] = None, *,
+                 serve_slots: int = 4, wait_timeout: float = 10.0,
+                 max_wait_rounds: int = 3, nshards: int = 16,
+                 intra_rack=None, cross_rack=None):
+        self.topology = topology or Topology()
+        self.serve_slots = serve_slots
+        self.wait_timeout = wait_timeout
+        self.max_wait_rounds = max_wait_rounds
+        self._shards = [_Shard() for _ in range(max(nshards, 1))]
+        self._meta = threading.Lock()            # membership only
+        self._stats = threading.Lock()           # per-serve accounting
+        self._counters = threading.Lock()        # rare coalesce/rearm ticks
+        self._clients: dict[str, object] = {}
+        self._racks: dict[str, str] = {}         # client_id -> rack
+        self._sems: dict[str, threading.Semaphore] = {}
+        # client_id -> {"blocks_served", "bytes_served", "active_serves"}
+        self.stats: dict[str, dict] = {}
+        self.link_stats = {
+            "intra_rack": {"blocks": 0, "bytes": 0},
+            "cross_rack": {"blocks": 0, "bytes": 0},
+        }
+        self.coalesced_fetches = 0
+        self.rearmed_fetches = 0
+        self._throttles = {"intra_rack": intra_rack, "cross_rack": cross_rack}
+
+    # ----- membership -------------------------------------------------
+
+    def join(self, client, *, replace: bool = False):
+        """Register ``client`` (anything exposing ``node_id``,
+        ``get_cached_block`` and optionally ``client_id`` /
+        ``cached_hashes``).  Duplicate identities are rejected unless
+        ``replace=True`` (warm restarts re-register the same identity)."""
+        cid = _client_id(client)
+        with self._meta:
+            if cid in self._clients and not replace:
+                raise ValueError(
+                    f"duplicate swarm client identity {cid!r}: two clients "
+                    "on one node must carry distinct client_ids (e.g. "
+                    "distinct image digests) or join with replace=True")
+            self._clients[cid] = client
+            self._racks[cid] = self.topology.rack_of(client.node_id)
+            self._sems.setdefault(cid, threading.Semaphore(self.serve_slots))
+            self.stats.setdefault(cid, {"blocks_served": 0,
+                                        "bytes_served": 0,
+                                        "active_serves": 0})
+        have = getattr(client, "cached_hashes", None)
+        if have is not None:
+            self.announce(client, have())
+
+    def leave(self, client):
+        cid = _client_id(client)
+        with self._meta:
+            self._clients.pop(cid, None)
+        # holder-index entries are pruned lazily on the next failed pick
+
+    def announce(self, client, hashes: Iterable[str]):
+        """Add ``client`` as a holder of ``hashes`` (warm-cache seeding)."""
+        cid = _client_id(client)
+        for h in hashes:
+            sh = self._shard(h)
+            with sh.lock:
+                sh.holders.setdefault(h, set()).add(cid)
+
+    # ----- index ------------------------------------------------------
+
+    def _shard(self, h: str) -> _Shard:
+        return self._shards[zlib.crc32(h.encode()) % len(self._shards)]
+
+    def holder_count(self, h: str) -> int:
+        sh = self._shard(h)
+        with sh.lock:
+            return len(sh.holders.get(h, ()))
+
+    def rarest_first(self, hashes: Iterable[str]) -> list[str]:
+        """Order ``hashes`` by ascending holder count (stable within a
+        rarity class), so dissemination maximizes swarm diversity."""
+        out = list(hashes)
+        counts = {h: self.holder_count(h) for h in out}
+        out.sort(key=lambda h: counts[h])
+        return out
+
+    # ----- fetch hot path ---------------------------------------------
+
+    def fetch(self, h: str, requester) -> Optional[bytes]:
+        """Block payload served peer-to-peer, or ``None`` when the caller
+        must fetch from the registry itself.  A ``None`` return normally
+        means the caller is the fetcher-of-record and MUST call
+        :meth:`publish` (success) or :meth:`abandon` (failure) once done;
+        a waiter that exhausted ``max_wait_rounds`` also gets ``None`` but
+        holds no marker."""
+        cid = _client_id(requester)
+        sh = self._shard(h)
+        parked = False
+        timeouts = 0
+        while True:
+            with sh.lock:
+                holders = [c for c in sh.holders.get(h, ()) if c != cid]
+                ev = None
+                if not holders:
+                    fl = sh.inflight.get(h)
+                    if fl is None:
+                        # caller becomes the (re-armed) fetcher-of-record
+                        sh.inflight[h] = _Flight(owner=cid)
+                        if parked:
+                            with self._counters:
+                                self.rearmed_fetches += 1
+                        return None
+                    ev = fl.event
+                    if not parked:
+                        parked = True
+                        with self._counters:
+                            self.coalesced_fetches += 1
+            if holders:
+                data = self._serve(h, holders, cid)
+                if data is not None:
+                    return data
+                continue  # stale holders pruned; re-evaluate
+            if ev.wait(timeout=self.wait_timeout):
+                # publish or abandon: re-check state — serve from the new
+                # holder, park behind a re-armer's flight, or re-arm
+                # ourselves.  Signaled wakes never count against the cap,
+                # so a burst of failures wakes exactly one re-armer per
+                # abandon instead of spilling every waiter to the registry.
+                continue
+            timeouts += 1
+            if timeouts > self.max_wait_rounds:
+                # the flight's owner is wedged (never published or
+                # abandoned): give up on the swarm and go to the registry
+                # directly — capped, and no marker is left dangling
+                return None
+
+    def _serve(self, h: str, holder_ids: list[str], requester_id: str
+               ) -> Optional[bytes]:
+        req_rack = self._racks.get(requester_id)
+        remaining = list(holder_ids)
+        while remaining:
+            # single O(H) min scan under the (serve-only) stats lock —
+            # the fetch/index path never touches this lock
+            with self._stats:
+                def load(c):
+                    st = self.stats.get(c, {})
+                    return (self._racks.get(c) != req_rack,
+                            st.get("active_serves", 0),
+                            st.get("bytes_served", 0))
+                peer_id = min(remaining, key=load)
+                remaining.remove(peer_id)
+                peer = self._clients.get(peer_id)
+                sem = self._sems.get(peer_id)
+                if peer is not None:
+                    self.stats[peer_id]["active_serves"] += 1
+            if peer is None:
+                self._drop_holder(h, peer_id)
+                continue
+            try:
+                with sem:
+                    data = peer.get_cached_block(h)
+            except OSError:
+                self._drop_holder(h, peer_id)
+                continue
+            finally:
+                with self._stats:
+                    self.stats[peer_id]["active_serves"] -= 1
+            link = ("intra_rack" if self._racks.get(peer_id) == req_rack
+                    else "cross_rack")
+            throttle = self._throttles.get(link)
+            if throttle is not None:
+                with throttle:
+                    throttle.charge(len(data))
+            with self._stats:
+                self.stats[peer_id]["blocks_served"] += 1
+                self.stats[peer_id]["bytes_served"] += len(data)
+                ls = self.link_stats[link]
+                ls["blocks"] += 1
+                ls["bytes"] += len(data)
+            return data
+        return None
+
+    def _drop_holder(self, h: str, cid: str):
+        sh = self._shard(h)
+        with sh.lock:
+            hs = sh.holders.get(h)
+            if hs is not None:
+                hs.discard(cid)
+                if not hs:
+                    del sh.holders[h]
+
+    # ----- publish / abandon ------------------------------------------
+
+    def publish(self, h: str, client=None):
+        """Mark ``h`` available on ``client`` and wake coalesced waiters.
+        Clears any in-flight marker for ``h`` (the block exists now, so
+        whoever owned the flight is moot)."""
+        sh = self._shard(h)
+        with sh.lock:
+            if client is not None:
+                sh.holders.setdefault(h, set()).add(_client_id(client))
+            fl = sh.inflight.pop(h, None)
+        if fl is not None:
+            fl.event.set()
+
+    def abandon(self, h: str, client):
+        """The fetcher-of-record failed: clear its marker and wake waiters
+        so exactly one of them re-arms and retries the registry."""
+        cid = _client_id(client)
+        sh = self._shard(h)
+        with sh.lock:
+            fl = sh.inflight.get(h)
+            if fl is None or fl.owner != cid:
+                return
+            del sh.inflight[h]
+        fl.event.set()

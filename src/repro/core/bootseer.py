@@ -20,9 +20,9 @@ from pathlib import Path
 from typing import Any, Callable, Optional
 
 from repro.blockstore.lazy import LazyImageClient
-from repro.blockstore.p2p import PeerGroup
 from repro.blockstore.prefetch import HotBlockService, prefetch_image
 from repro.blockstore.registry import Registry
+from repro.blockstore.swarm import Swarm, Topology
 from repro.core.profiler import StageAnalysisService, StageLogger
 from repro.core.stages import Stage
 from repro.dfs.fuse import HdfsFuseMount
@@ -67,7 +67,7 @@ class BootseerRuntime:
                  workdir: str | Path, optimize: bool = True,
                  analysis: Optional[StageAnalysisService] = None,
                  hot_threads: int = 8, ckpt_threads: int = 8,
-                 stripe_width: int = 8):
+                 stripe_width: int = 8, nodes_per_rack: int = 8):
         self.registry = registry
         self.hdfs = hdfs
         self.mount = HdfsFuseMount(hdfs)
@@ -83,6 +83,12 @@ class BootseerRuntime:
         self.hot_threads = hot_threads
         self.ckpt_threads = ckpt_threads
         self.stripe_width = stripe_width
+        # ONE swarm per runtime, shared by every job/run: membership is
+        # keyed by client identity (job+node+digest) and blocks are
+        # content-addressed, so concurrent jobs coexist, warm restarts
+        # rejoin, and block dedup serves across images
+        self.swarm = (Swarm(Topology(nodes_per_rack=nodes_per_rack))
+                      if optimize else None)
         self._run_counter: dict[str, int] = {}
         # one long-lived I/O pool shared by every node's prefetch across
         # runs: thread-spawn cost is paid once per runtime, and total
@@ -151,7 +157,7 @@ class BootseerRuntime:
         job_tag = f"{spec.job_id}#r{run_idx}"
         n = spec.num_nodes
         barrier = threading.Barrier(n)
-        peers = PeerGroup() if self.optimize else None
+        peers = self.swarm if self.optimize else None
         manifest = self.registry.get_manifest(spec.image)
         loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
         t_start = time.perf_counter()
@@ -179,7 +185,10 @@ class BootseerRuntime:
                           / f"n{rank}")
             client = LazyImageClient(
                 manifest, self.registry, blocks_dir,
-                node_id=f"node{rank:03d}", peers=peers)
+                node_id=f"node{rank:03d}", peers=peers,
+                client_id=(f"{spec.job_id}/n{rank}:"
+                           f"{manifest.digest[:8]}"),
+                peer_replace=True)
             use_prefetch = (self.optimize
                             and self.hot_service.has_record(manifest.digest))
             if use_prefetch:

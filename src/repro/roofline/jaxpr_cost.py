@@ -19,6 +19,7 @@ as a loop-correction FACTOR on XLA's fusion-aware totals, not directly).
 from __future__ import annotations
 
 import math
+import warnings
 from functools import lru_cache
 from typing import Any
 
@@ -62,11 +63,18 @@ def _jaxpr_of(obj):
     return obj.jaxpr if hasattr(obj, "jaxpr") else obj
 
 
-def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
+def jaxpr_cost(jaxpr, *, while_trips: int = 1,
+               strict: bool = False) -> tuple[float, float]:
     """Returns (flops, bytes) for one execution of ``jaxpr`` (global view).
 
     ``while_trips``: assumed trip count for raw while loops (lax.scan
     carries its length explicitly and does not need this).
+
+    ``strict``: a shard_map equation whose body jaxpr cannot be located
+    (a future JAX rename of the param key — see
+    ``compat._SHARD_MAP_BODY_KEYS``) contributes ZERO cost; by default
+    that emits a ``RuntimeWarning`` so the silent underestimate is at
+    least loud, and under ``strict=True`` it raises instead.
     """
     flops = 0.0
     bytes_ = 0.0
@@ -81,17 +89,18 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
             bytes_ += io_bytes
         elif name == "scan":
             body = _jaxpr_of(eqn.params["jaxpr"])
-            f, b = jaxpr_cost(body, while_trips=while_trips)
+            f, b = jaxpr_cost(body, while_trips=while_trips, strict=strict)
             n = eqn.params["length"]
             flops += f * n
             bytes_ += b * n
         elif name == "while":
             body = _jaxpr_of(eqn.params["body_jaxpr"])
-            f, b = jaxpr_cost(body, while_trips=while_trips)
+            f, b = jaxpr_cost(body, while_trips=while_trips, strict=strict)
             flops += f * while_trips
             bytes_ += b * while_trips
         elif name == "cond":
-            costs = [jaxpr_cost(_jaxpr_of(br), while_trips=while_trips)
+            costs = [jaxpr_cost(_jaxpr_of(br), while_trips=while_trips,
+                                strict=strict)
                      for br in eqn.params["branches"]]
             f = max(c[0] for c in costs)
             b = max(c[1] for c in costs)
@@ -99,8 +108,21 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
             bytes_ += b
         elif name == "shard_map":
             body = compat.shard_map_body(eqn.params)
-            f, b = (jaxpr_cost(body, while_trips=while_trips)
-                    if body is not None else (0.0, 0.0))
+            if body is None:
+                msg = (
+                    "shard_map equation carries no recognizable body "
+                    f"jaxpr (params keys: {sorted(eqn.params)}; known "
+                    f"body keys: {list(compat._SHARD_MAP_BODY_KEYS)}) — "
+                    "its FLOPs/bytes are NOT counted.  A JAX upgrade "
+                    "likely renamed the param; add the new key to "
+                    "repro.compat._SHARD_MAP_BODY_KEYS.")
+                if strict:
+                    raise ValueError(msg)
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+                f, b = 0.0, 0.0
+            else:
+                f, b = jaxpr_cost(body, while_trips=while_trips,
+                                  strict=strict)
             n = compat.shard_map_mesh_size(eqn.params)
             flops += f * n
             bytes_ += b * n
@@ -110,7 +132,8 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
                 if k in eqn.params and hasattr(_jaxpr_of(eqn.params[k]),
                                                "eqns"):
                     f, b = jaxpr_cost(_jaxpr_of(eqn.params[k]),
-                                      while_trips=while_trips)
+                                      while_trips=while_trips,
+                                      strict=strict)
                     flops += f
                     bytes_ += b
                     break
@@ -126,11 +149,14 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1) -> tuple[float, float]:
     return flops, bytes_
 
 
-def analytic_cost(fn, *args, while_trips: int = 1) -> dict:
+def analytic_cost(fn, *args, while_trips: int = 1,
+                  strict: bool = False) -> dict:
     """Trace ``fn(*args)`` (ShapeDtypeStructs fine) and walk its jaxpr.
 
     Returns {"flops": global flops, "bytes": naive global bytes}.
+    ``strict=True`` raises on shard_map equations whose body jaxpr key is
+    unknown instead of warning and undercounting.
     """
     closed = jax.make_jaxpr(fn)(*args)
-    f, b = jaxpr_cost(closed.jaxpr, while_trips=while_trips)
+    f, b = jaxpr_cost(closed.jaxpr, while_trips=while_trips, strict=strict)
     return {"flops": f, "bytes": b}

@@ -38,6 +38,24 @@ class Transfer:
     p2p_bonus_per_done: float = 0.0
 
 
+def dissemination_waves(n: int, fanout: int) -> list[int]:
+    """Wave index (1-based) for each of ``n`` receivers fed from ONE
+    initial holder through a bounded-degree tree: every completed receiver
+    becomes a holder, and each holder serves at most ``fanout`` children
+    per wave — so wave k can admit ``holders_k * fanout`` new receivers
+    and the tree completes in O(log n) waves.  This is the fluid-model
+    twin of ``repro.blockstore.swarm``'s serve-slot bound."""
+    waves: list[int] = []
+    holders, wave, remaining = 1, 1, n
+    while remaining > 0:
+        take = min(holders * max(fanout, 1), remaining)
+        waves.extend([wave] * take)
+        holders += take
+        remaining -= take
+        wave += 1
+    return waves
+
+
 def _rates(active: list[Transfer], done_count: dict) -> dict[int, float]:
     """Max-min fair allocation per resource (equal split, per-client cap)."""
     by_res: dict[str, list[Transfer]] = {}

@@ -19,7 +19,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.stages import Stage
-from repro.simcluster.resources import FluidResource, Transfer, simulate_stage
+from repro.simcluster.resources import (FluidResource, Transfer,
+                                        dissemination_waves, simulate_stage)
 
 GB = 1024 ** 3
 MB = 1024 ** 2
@@ -37,8 +38,13 @@ class ClusterParams:
     registry_throttle_after: int = 256
     registry_throttle_factor: float = 3.0
     lazy_efficiency: float = 0.023     # serial on-demand faulting efficiency
-    p2p_bonus: float = 1.5 * GB        # extra serving capacity per warm peer
+    p2p_bonus: float = 1.5 * GB        # per-link peer serving rate
     container_start_s: float = 2.5     # unpack/exec once blocks are local
+    # swarm topology (§4.2 tree dissemination): nodes grouped into racks,
+    # one seed per rack; bounded per-holder fan-out
+    nodes_per_rack: int = 8
+    rack_uplink: float = 3.0 * GB      # cross-rack per-link rate
+    swarm_fanout: int = 4              # serve-slot bound per warm holder
 
     # environment setup (§3.2: 100-300 s; §3.4: SCM throttling)
     install_exec_s: float = 95.0       # local pip/exec work
@@ -112,13 +118,63 @@ class StartupWorkload:
         hot = p.image_bytes * p.hot_fraction
         jit = self._jitter(rng, num_nodes)
         transfers, extra = [], {}
+        registry_egress = 0.0
         if warm:
-            # prefetch: parallel hot-block fetch; peers that already hold
-            # blocks serve others, so serving capacity scales with the job
-            src = FluidResource(
-                "registry+p2p",
-                p.registry_capacity + p.p2p_bonus * max(num_nodes - 1, 0) * 0.5,
-                p.node_nic)
+            # §4.2 swarm: ONE global seed pulls the hot set from the
+            # registry (egress is O(unique bytes), not O(nodes)); rack
+            # seeds replicate cross-rack through a bounded-fanout tree;
+            # everyone else fans out intra-rack the same way.
+            rack_n = max(p.nodes_per_rack, 1)
+            racks = [nodes[i:i + rack_n]
+                     for i in range(0, num_nodes, rack_n)]
+            seed_rate = min(p.node_nic, p.registry_capacity)
+            cross_rate = min(p.node_nic, p.rack_uplink)
+            peer_rate = min(p.node_nic, p.p2p_bonus)
+            seed_t = hot / seed_rate
+            cross_t = hot / cross_rate
+            peer_t = hot / peer_rate
+            registry_egress = hot
+            registry = FluidResource("registry", p.registry_capacity,
+                                     p.node_nic)
+            cross_waves = dissemination_waves(len(racks) - 1,
+                                              p.swarm_fanout)
+            # ONE FluidResource per (tier, wave): simulate_stage pools
+            # transfers sharing a resource, so every member of a wave
+            # must reference the same object, sized to the whole wave
+            cross_res = {
+                w: FluidResource(f"cross_w{w}",
+                                 cross_waves.count(w) * cross_rate,
+                                 cross_rate)
+                for w in set(cross_waves)}
+            for r, rack in enumerate(racks):
+                if r == 0:
+                    seed_start, seed_res = 0.0, registry
+                    rack_seed_done = seed_t
+                else:
+                    w = cross_waves[r - 1]
+                    seed_start = seed_t + (w - 1) * cross_t
+                    rack_seed_done = seed_start + cross_t
+                    seed_res = cross_res[w]
+                i = r * rack_n
+                transfers.append(Transfer(
+                    rack[0], seed_res, hot,
+                    start=seed_start + 0.3 * jit[i]))
+                intra_waves = dissemination_waves(len(rack) - 1,
+                                                  p.swarm_fanout)
+                intra_res = {
+                    w: FluidResource(f"rack{r}_w{w}",
+                                     intra_waves.count(w) * peer_rate,
+                                     peer_rate)
+                    for w in set(intra_waves)}
+                for k, node in enumerate(rack[1:]):
+                    w = intra_waves[k]
+                    i = r * rack_n + k + 1
+                    transfers.append(Transfer(
+                        node, intra_res[w], hot,
+                        start=(rack_seed_done + (w - 1) * peer_t
+                               + 0.3 * jit[i])))
+            for i, node in enumerate(nodes):
+                extra[node] = p.container_start_s * jit[i]
         else:
             # lazy: serial on-demand faulting -> low effective per-client
             # rate; every miss hits the registry (plus limited p2p reuse)
@@ -127,10 +183,12 @@ class StartupWorkload:
                 p.registry_capacity + p.p2p_bonus * max(num_nodes - 1, 0) * 0.1,
                 p.node_nic * p.lazy_efficiency,
                 p.registry_throttle_after, p.registry_throttle_factor)
-        for i, node in enumerate(nodes):
-            nbytes = hot if warm else hot * jit[i] ** 0.5
-            transfers.append(Transfer(node, src, nbytes, start=0.3 * jit[i]))
-            extra[node] = p.container_start_s * jit[i]
+            for i, node in enumerate(nodes):
+                nbytes = hot * jit[i] ** 0.5
+                transfers.append(Transfer(node, src, nbytes,
+                                          start=0.3 * jit[i]))
+                extra[node] = p.container_start_s * jit[i]
+                registry_egress += nbytes
         stages[Stage.IMAGE_LOAD.value] = simulate_stage(transfers, extra)
 
         # ---- Environment Setup ----
@@ -176,4 +234,5 @@ class StartupWorkload:
         node_level = {n: sum(stages[s][n] for s in stages) for n in nodes}
         job_level = sum(max(stages[s].values()) for s in stages)
         return {"stages": stages, "node_level": node_level,
-                "job_level": job_level}
+                "job_level": job_level,
+                "registry_egress_bytes": registry_egress}

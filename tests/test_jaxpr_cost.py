@@ -1,11 +1,13 @@
 """Loop-aware analytic cost walker (repro.roofline.jaxpr_cost)."""
 
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro import compat
-from repro.roofline.jaxpr_cost import analytic_cost
+from repro.roofline.jaxpr_cost import analytic_cost, jaxpr_cost
 
 
 def _w(*shape):
@@ -72,6 +74,35 @@ class TestWalker:
         c = analytic_cost(body, _w(32, 32))["flops"]
         # 1-device mesh -> exactly one shard's flops
         assert c >= 2 * 32 * 32 * 32
+
+    def test_unknown_shard_map_body_key_warns(self):
+        """A shard_map equation whose body-jaxpr param key is unknown to
+        compat._SHARD_MAP_BODY_KEYS (a future JAX rename) must not be
+        silently priced at zero: warn by default, raise under strict."""
+        inner = SimpleNamespace(eqns=[])
+        eqn = SimpleNamespace(
+            primitive=SimpleNamespace(name="shard_map"),
+            params={"renamed_body_jaxpr": SimpleNamespace(jaxpr=inner),
+                    "mesh": None},
+            invars=[], outvars=[])
+        fake = SimpleNamespace(eqns=[eqn])
+        with pytest.warns(RuntimeWarning, match="no recognizable body"):
+            f, b = jaxpr_cost(fake)
+        assert (f, b) == (0.0, 0.0)
+        with pytest.raises(ValueError, match="_SHARD_MAP_BODY_KEYS"):
+            jaxpr_cost(fake, strict=True)
+
+    def test_known_shard_map_key_does_not_warn(self, rules):
+        """The real shard_map lowering must keep resolving silently."""
+        import warnings
+
+        from jax.sharding import PartitionSpec as P
+        body = compat.shard_map(lambda x: x @ x, mesh=rules.mesh,
+                                in_specs=P(None, None),
+                                out_specs=P(None, None), check_vma=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            analytic_cost(body, _w(32, 32), strict=True)
 
     def test_train_step_close_to_6nd(self, rules):
         from repro.configs import get_tiny

@@ -1,0 +1,388 @@
+"""Swarm-scale §4.2 distribution engine (repro.blockstore.swarm):
+singleflight re-arm, identity-keyed accounting, topology tiers,
+rarest-first, trace evolution, and the registry-egress budget."""
+
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.blockstore.image import build_image
+from repro.blockstore.lazy import LazyImageClient
+from repro.blockstore.prefetch import HotBlockService
+from repro.blockstore.registry import Registry
+from repro.blockstore.swarm import Swarm, Topology
+
+BS = 16 * 1024
+
+
+@pytest.fixture()
+def image_env(tmp_path, rng):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "app.bin").write_bytes(
+        rng.integers(0, 256, 6 * BS, dtype=np.uint8).tobytes())
+    (src / "lib.bin").write_bytes(
+        rng.integers(0, 256, 10 * BS + 7, dtype=np.uint8).tobytes())
+    reg = Registry(tmp_path / "reg")
+    man = build_image(src, reg, "img", block_size=BS)
+    return tmp_path, reg, man
+
+
+class _FailOnceRegistry:
+    """Fails the FIRST get_block per hash, then delegates — the
+    fetcher-of-record dies, and the swarm must recover with ONE extra
+    registry fetch, not an N-1 stampede."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self._lock = threading.Lock()
+        self.attempts: dict = {}
+
+    def get_block(self, h):
+        with self._lock:
+            n = self.attempts[h] = self.attempts.get(h, 0) + 1
+        if n == 1:
+            time.sleep(0.02)  # let waiters park on the flight first
+            raise OSError(f"injected registry failure for {h[:8]}")
+        return self._inner.get_block(h)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+class TestSingleflightRearm:
+    def test_failed_fetcher_costs_one_extra_fetch(self, image_env,
+                                                  tmp_path):
+        """Regression (§3.4 stampede): the fetcher-of-record failing must
+        hand the registry to exactly ONE re-armed waiter — everyone else
+        stays parked and gets served peer-to-peer."""
+        tmp, reg, man = image_env
+        flaky = _FailOnceRegistry(reg)
+        swarm = Swarm()
+        n = 8
+        clients = [LazyImageClient(man, flaky, tmp_path / f"c{i}",
+                                   node_id=f"n{i}", peers=swarm)
+                   for i in range(n)]
+        h = man.file_map()["app.bin"].blocks[0]
+
+        results, errors = [], []
+
+        def go(c):
+            try:
+                results.append(c.ensure_block(h))
+            except OSError as e:
+                errors.append(e)
+
+        with ThreadPoolExecutor(n) as ex:
+            list(ex.map(go, clients))
+
+        # 1 failed attempt + 1 re-armed success — never N-1 retries
+        assert flaky.attempts[h] == 2, flaky.attempts
+        assert len(errors) == 1            # only the original fetcher dies
+        data = reg.get_block(h)
+        assert all(r == data for r in results)
+        assert swarm.rearmed_fetches >= 1
+        # everyone (including the failed fetcher's retry path) can read now
+        for c in clients:
+            assert c.ensure_block(h) == data
+
+    def test_repeated_failures_wake_one_rearmer_each(self, image_env,
+                                                     tmp_path):
+        """A BURST of fetcher failures must hand the registry to one
+        re-armer per abandon — signaled wakes never count against the
+        give-up cap, so parked waiters don't spill to the registry en
+        masse after max_wait_rounds failures."""
+        tmp, reg, man = image_env
+
+        class _FailK(_FailOnceRegistry):
+            K = 5                      # > default max_wait_rounds
+
+            def get_block(self, h):
+                with self._lock:
+                    n = self.attempts[h] = self.attempts.get(h, 0) + 1
+                if n <= self.K:
+                    time.sleep(0.01)
+                    raise OSError(f"injected failure #{n}")
+                return self._inner.get_block(h)
+
+        flaky = _FailK(reg)
+        swarm = Swarm()
+        n = 12
+        clients = [LazyImageClient(man, flaky, tmp_path / f"k{i}",
+                                   node_id=f"k{i}", peers=swarm)
+                   for i in range(n)]
+        h = man.file_map()["app.bin"].blocks[0]
+        results, errors = [], []
+
+        def go(c):
+            try:
+                results.append(c.ensure_block(h))
+            except OSError as e:
+                errors.append(e)
+
+        with ThreadPoolExecutor(n) as ex:
+            list(ex.map(go, clients))
+        # 5 failures then ONE success: exactly K+1 registry attempts and
+        # K failed clients — the remaining waiters all got peer-served
+        assert flaky.attempts[h] == _FailK.K + 1, flaky.attempts
+        assert len(errors) == _FailK.K
+        assert len(results) == n - _FailK.K
+        assert all(r == reg.get_block(h) for r in results)
+
+    def test_stuck_owner_waiter_gives_up_capped(self, image_env, tmp_path):
+        """A waiter behind a fetcher that neither publishes nor abandons
+        re-checks each round and eventually falls back to the registry —
+        bounded by max_wait_rounds, without hanging forever."""
+        tmp, reg, man = image_env
+        swarm = Swarm(wait_timeout=0.03, max_wait_rounds=2)
+        a = LazyImageClient(man, reg, tmp_path / "a", node_id="a",
+                            peers=swarm)
+        b = LazyImageClient(man, reg, tmp_path / "b", node_id="b",
+                            peers=swarm)
+        h = man.file_map()["app.bin"].blocks[0]
+        assert swarm.fetch(h, a) is None   # a is fetcher-of-record... and stalls
+        t0 = time.perf_counter()
+        assert swarm.fetch(h, b) is None   # b gives up after capped rounds
+        assert time.perf_counter() - t0 < 2.0
+        # b held no marker, so the flight still belongs to a; abandon frees it
+        swarm.abandon(h, a)
+        assert swarm.fetch(h, b) is None   # b can now re-arm as owner
+        swarm.publish(h, b)
+
+    def test_abandon_only_clears_own_flight(self, image_env, tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        a = LazyImageClient(man, reg, tmp_path / "a", node_id="a",
+                            peers=swarm)
+        b = LazyImageClient(man, reg, tmp_path / "b", node_id="b",
+                            peers=swarm)
+        h = "ab" * 32
+        assert swarm.fetch(h, a) is None
+        swarm.abandon(h, b)                # not the owner: no-op
+        sh = swarm._shard(h)
+        assert h in sh.inflight
+        swarm.abandon(h, a)
+        assert h not in sh.inflight
+
+
+class TestIdentityKeying:
+    def test_two_images_one_node_do_not_clobber_stats(self, tmp_path, rng):
+        """Multi-image startups: two clients on one node are distinct
+        swarm members with independent served-bytes accounting."""
+        reg = Registry(tmp_path / "reg")
+        mans = []
+        for k in range(2):
+            src = tmp_path / f"src{k}"
+            src.mkdir()
+            (src / "f.bin").write_bytes(
+                rng.integers(0, 256, 3 * BS, dtype=np.uint8).tobytes())
+            mans.append(build_image(src, reg, f"img{k}", block_size=BS))
+        swarm = Swarm()
+        c0a = LazyImageClient(mans[0], reg, tmp_path / "n0a",
+                              node_id="n0", peers=swarm)
+        c0b = LazyImageClient(mans[1], reg, tmp_path / "n0b",
+                              node_id="n0", peers=swarm)
+        assert c0a.client_id != c0b.client_id
+        assert len(swarm.stats) == 2
+        c0a.read_file("f.bin")
+        c0b.read_file("f.bin")
+        # a second node pulls image 0 peer-to-peer: ONLY c0a's accounting
+        # moves, and image 1's client is untouched
+        c1 = LazyImageClient(mans[0], reg, tmp_path / "n1",
+                             node_id="n1", peers=swarm)
+        c1.read_file("f.bin")
+        assert swarm.stats[c0a.client_id]["blocks_served"] == 3
+        assert swarm.stats[c0b.client_id]["blocks_served"] == 0
+
+    def test_duplicate_identity_rejected(self, image_env, tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        LazyImageClient(man, reg, tmp_path / "x1", node_id="n0",
+                        peers=swarm)
+        with pytest.raises(ValueError, match="duplicate swarm client"):
+            LazyImageClient(man, reg, tmp_path / "x2", node_id="n0",
+                            peers=swarm)
+        # warm restarts re-register the same identity explicitly
+        LazyImageClient(man, reg, tmp_path / "x1", node_id="n0",
+                        peers=swarm, peer_replace=True)
+
+    def test_warm_cache_announced_on_join(self, image_env, tmp_path):
+        """A rejoining client's on-disk blocks are indexed immediately, so
+        warm peers serve without ever re-faulting."""
+        tmp, reg, man = image_env
+        w = LazyImageClient(man, reg, tmp_path / "w", node_id="w")
+        w.read_file("app.bin")             # warm cache, swarm-less
+        swarm = Swarm()
+        w2 = LazyImageClient(man, reg, tmp_path / "w", node_id="w",
+                             peers=swarm)  # same cache dir rejoins
+        h = man.file_map()["app.bin"].blocks[0]
+        assert swarm.holder_count(h) == 1
+        c = LazyImageClient(man, reg, tmp_path / "c", node_id="c",
+                            peers=swarm)
+        before = reg.stats["block_requests"]
+        c.read_file("app.bin")
+        assert reg.stats["block_requests"] == before
+        assert swarm.stats[w2.client_id]["blocks_served"] == 6
+
+
+class TestTopology:
+    def test_rack_assignment(self):
+        t = Topology(nodes_per_rack=4)
+        assert t.rack_of("node0003") == "rack0"
+        assert t.rack_of("node0004") == "rack1"
+        t2 = Topology(racks={"weird": "rackX"})
+        assert t2.rack_of("weird") == "rackX"
+
+    def test_same_rack_preferred_and_link_stats(self, image_env, tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm(Topology(nodes_per_rack=2))
+        mk = lambda i: LazyImageClient(  # noqa: E731
+            man, reg, tmp_path / f"t{i}", node_id=f"node{i}", peers=swarm)
+        c0 = mk(0)                         # rack0
+        c0.read_file("app.bin")            # seed via registry
+        c2 = mk(2)                         # rack1
+        c2.read_file("app.bin")            # cross-rack from c0
+        assert swarm.link_stats["cross_rack"]["blocks"] == 6
+        c1 = mk(1)                         # rack0: must prefer c0 (same rack)
+        c1.read_file("app.bin")
+        assert swarm.link_stats["intra_rack"]["blocks"] == 6
+        assert swarm.stats[c2.client_id]["blocks_served"] == 0
+        c3 = mk(3)                         # rack1: must prefer c2
+        c3.read_file("app.bin")
+        assert swarm.stats[c2.client_id]["blocks_served"] == 6
+
+    def test_rarest_first_orders_by_holder_count(self, image_env,
+                                                 tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        c0 = LazyImageClient(man, reg, tmp_path / "r0", node_id="n0",
+                             peers=swarm)
+        c1 = LazyImageClient(man, reg, tmp_path / "r1", node_id="n1",
+                             peers=swarm)
+        b = man.file_map()["lib.bin"].blocks
+        swarm.announce(c0, [b[0], b[1]])
+        swarm.announce(c1, [b[0]])
+        assert swarm.rarest_first([b[0], b[1], b[2]]) == [b[2], b[1], b[0]]
+
+
+class TestStoreAccounting:
+    def test_lost_race_not_counted(self, image_env, tmp_path):
+        """bytes_fetched counts blocks actually written, not lost races."""
+        tmp, reg, man = image_env
+        c = LazyImageClient(man, reg, tmp_path / "s")
+        h = man.file_map()["app.bin"].blocks[0]
+        data = reg.get_block(h)
+        assert c._store(h, data) is True
+        assert c.stats["bytes_fetched"] == len(data)
+        assert c._store(h, data) is False
+        assert c.stats["bytes_fetched"] == len(data)
+
+
+class TestConcurrency:
+    def test_32_threads_8_clients_registry_budget(self, image_env,
+                                                  tmp_path):
+        """≥32 threads across ≥8 swarm clients cold-starting one image:
+        registry requests stay ~= unique blocks (singleflight + swarm),
+        and every client ends bit-identical."""
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        clients = [LazyImageClient(man, reg, tmp_path / f"cc{i}",
+                                   node_id=f"cc{i}", peers=swarm)
+                   for i in range(8)]
+        blocks = sorted(man.unique_blocks)
+        tasks = [(c, h) for h in blocks for c in clients]
+        before = reg.stats["block_requests"]
+        with ThreadPoolExecutor(32) as ex:
+            list(ex.map(lambda t: t[0].ensure_block(t[1]), tasks))
+        uniq = len(blocks)
+        assert reg.stats["block_requests"] - before <= uniq + max(
+            2, uniq // 10)
+        for c in clients:
+            assert c.cached_fraction() == 1.0
+        ref = LazyImageClient(man, reg, tmp_path / "ref")
+        for path in ("app.bin", "lib.bin"):
+            want = ref.read_file(path)
+            assert all(c.read_file(path) == want for c in clients)
+
+
+class TestTraceEvolution:
+    def _rec(self, blocks, t0=0.0):
+        return [{"hash": h, "file": "f", "block": i, "t": t0 + i * 0.01}
+                for i, h in enumerate(blocks)]
+
+    def test_decay_evicts_stale_entrypoints(self, tmp_path):
+        svc = HotBlockService(tmp_path / "svc", decay=0.5, min_score=0.2)
+        svc.record("d1", self._rec(["a", "b"]))
+        for _ in range(3):                # entrypoint changed: b stays, c new
+            svc.record("d1", self._rec(["b", "c"]))
+        hot = set(svc.hot_blocks("d1"))
+        assert hot == {"b", "c"}          # 'a' decayed 1.0->0.125 < 0.2
+        assert svc.scores("d1")["b"] > svc.scores("d1")["c"] * 0.9
+
+    def test_new_entrypoint_enters_immediately(self, tmp_path):
+        svc = HotBlockService(tmp_path / "svc")
+        svc.record("d1", self._rec(["a"]))
+        svc.record("d1", self._rec(["a", "z"]))
+        assert "z" in svc.hot_blocks("d1")
+
+    def test_first_touch_order_preserved(self, tmp_path):
+        svc = HotBlockService(tmp_path / "svc")
+        svc.record("d1", self._rec(["x", "y", "z"]))
+        assert svc.hot_blocks("d1") == ["x", "y", "z"]
+
+    def test_seed_format_readable(self, tmp_path):
+        """Flat trace-list files written by the seed service still load
+        (and migrate on the next record)."""
+        svc = HotBlockService(tmp_path / "svc")
+        legacy = [{"hash": "a", "file": "f", "block": 0, "t": 0.5}]
+        (tmp_path / "svc" / "d9.trace.json").write_text(json.dumps(legacy))
+        assert svc.hot_blocks("d9") == ["a"]
+        svc.record("d9", self._rec(["a", "b"]))
+        state = json.loads((tmp_path / "svc" / "d9.trace.json").read_text())
+        assert state["runs"] == 2
+        assert set(svc.hot_blocks("d9")) == {"a", "b"}
+
+    def test_invalid_decay_rejected(self, tmp_path):
+        with pytest.raises(ValueError):
+            HotBlockService(tmp_path / "svc", decay=1.0)
+
+
+@pytest.mark.slow
+class TestEgressBudget:
+    def test_64_nodes_cold_start_egress_near_unique_bytes(self, tmp_path,
+                                                          rng):
+        """Acceptance: 64 nodes cold-starting one image cost the registry
+        <= 1.2x the unique block bytes — not ~64x as naive per-node pulls
+        would."""
+        src = tmp_path / "src"
+        src.mkdir()
+        (src / "app.bin").write_bytes(
+            rng.integers(0, 256, 16 * BS, dtype=np.uint8).tobytes())
+        (src / "lib.bin").write_bytes(
+            rng.integers(0, 256, 8 * BS + 11, dtype=np.uint8).tobytes())
+        reg = Registry(tmp_path / "reg")
+        man = build_image(src, reg, "img", block_size=BS)
+        swarm = Swarm(Topology(nodes_per_rack=8))
+        clients = [LazyImageClient(man, reg, tmp_path / f"n{i}",
+                                   node_id=f"node{i:04d}", peers=swarm)
+                   for i in range(64)]
+
+        def warm(c):
+            for h in swarm.rarest_first(sorted(man.unique_blocks)):
+                c.ensure_block(h)
+
+        before = reg.stats["bytes_served"]
+        with ThreadPoolExecutor(16) as ex:
+            list(ex.map(warm, clients))
+        egress = reg.stats["bytes_served"] - before
+        assert egress <= 1.2 * man.unique_block_bytes, (
+            f"registry egress {egress} vs unique "
+            f"{man.unique_block_bytes}")
+        assert all(c.cached_fraction() == 1.0 for c in clients)
+        # and the load was spread: no single peer served everything
+        served = [s["blocks_served"] for s in swarm.stats.values()]
+        assert sorted(served)[-1] < sum(served)
