@@ -1,0 +1,230 @@
+"""Pipelined-vs-sequential warm startup benchmark (the startup-DAG PR's
+headline number).
+
+Both configurations run the SAME optimized engines (swarm prefetch,
+env-cache restore, planned checkpoint resume) through the SAME task
+bodies; the only difference is the schedule: ``pipeline=False`` keeps the
+seed's barrier-per-stage order, ``pipeline=True`` lets env restore and the
+checkpoint params wave start at t=0 and overlap the image fetch.  The
+registry and the DFS carry deterministic ``ThrottleModel`` bandwidth (the
+sleeps release the GIL, so overlap is real on 2-CPU runners), and the two
+runs are verified BYTE-IDENTICAL: every image block and every restored
+site-packages file is hashed, and the counted DFS checkpoint bytes must
+match exactly.
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline --json out.json
+    # CI regression gate (exit 2 when pipelined/sequential > --max-ratio):
+    PYTHONPATH=src python -m benchmarks.bench_pipeline --max-ratio 0.85
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from benchmarks.common import emit, hash_tree
+except ModuleNotFoundError:  # script mode: put the repo root on sys.path
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import emit, hash_tree
+
+from repro.blockstore.image import build_image
+from repro.blockstore.registry import Registry
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core.bootseer import BootseerRuntime, JobSpec
+from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+
+BS = 64 * 1024
+REGISTRY_BW = 2e6       # B/s shared — hot set ~0.5 s for the swarm seed
+DFS_BW = 8e6            # B/s shared — env archive + ckpt waves ~1 s
+
+
+def _build_world(root: Path, rng):
+    """Shared infrastructure: throttled registry + DFS, image, env cache
+    source, striped checkpoint."""
+    src = root / "src"
+    (src / "bin").mkdir(parents=True)
+    (src / "bin" / "start").write_bytes(
+        rng.integers(0, 256, 16 * BS, dtype=np.uint8).tobytes())
+    (src / "assets.bin").write_bytes(
+        rng.integers(0, 256, 48 * BS, dtype=np.uint8).tobytes())
+    reg = Registry(root / "reg",
+                   throttle=ThrottleModel(bandwidth=REGISTRY_BW,
+                                          throttle_after=64,
+                                          timescale=1.0))
+    build_image(src, reg, "img", block_size=BS)
+    hdfs = HdfsCluster(root / "hdfs", num_groups=8, block_size=1 << 20,
+                       throttle=ThrottleModel(bandwidth=DFS_BW,
+                                              throttle_after=64,
+                                              timescale=1.0))
+    ck = Checkpointer(hdfs, striped=True, width=8)
+    params = {"w": rng.standard_normal((256, 4096)).astype(np.float32)}
+    opt = {"mu": {"w": np.ones((256, 4096), np.float32)},
+           "nu": {"w": np.ones((256, 4096), np.float32)}}
+    ck.save(100, params, opt)
+    return reg, hdfs, ck
+
+
+def _spec(n: int) -> JobSpec:
+    def env_setup(target, rank):
+        time.sleep(0.05)  # the install exec the cache replaces
+        for i in range(24):
+            (target / f"dep{i:02d}.py").write_text(f"x = {i}\n" * 512)
+    return JobSpec(
+        job_id="pipejob", image="img", num_nodes=n,
+        job_params={"deps": ["a==1"], "gpu": "H800"},
+        startup_reads=[("bin/start", 0, -1)],
+        env_setup=env_setup, resume_step=100, resume_plan="rows")
+
+
+def _node_state(workdir: Path) -> dict:
+    """On-disk state a startup produced: image block caches + restored
+    site-packages trees (keyed relative, so two workdirs compare)."""
+    state = {}
+    state.update({f"blocks/{k}": v
+                  for k, v in hash_tree(workdir / "_blockcache").items()})
+    for run_dir in sorted(workdir.glob("pipejob_*")):
+        for k, v in hash_tree(run_dir).items():
+            state[f"{run_dir.name}/{k}"] = v
+    return state
+
+
+def _one_mode(root: Path, reg, hdfs, ck, hot_root: Path, n: int,
+              pipeline: bool, rep: int = 0):
+    """One warm startup on FRESH nodes (cold node-local caches, warm
+    infrastructure: hot record, env cache and checkpoint already on the
+    shared registry/DFS)."""
+    tag = "pipe" if pipeline else "seq"
+    workdir = root / f"w_{tag}_{n}_r{rep}"
+    egress0 = reg.stats["bytes_served"]
+    read0 = hdfs.read_bytes
+    with BootseerRuntime(registry=reg, hdfs=hdfs, workdir=workdir,
+                         optimize=True, pipeline=pipeline,
+                         hot_root=hot_root) as rt:
+        res = rt.run_startup(_spec(n), checkpointer=ck)
+        rt.drain_deferred()   # cold remainder + opt wave, off the clock
+    return {
+        "total_s": res.total_s,
+        "dfs_read_bytes": hdfs.read_bytes - read0,
+        "registry_egress": reg.stats["bytes_served"] - egress0,
+        "gating": res.notes["gating_counts"],
+        "state": _node_state(workdir),
+        "prefetch_used": res.notes["prefetch_used"],
+    }
+
+
+def run(nodes=(1, 2, 4, 8, 16, 32), json_path=None, max_ratio=None,
+        repeats: int = 2):
+    """``repeats``: each (mode, n) cell runs this many times and the
+    per-mode walltime is the MIN over runs — a single load spike on a
+    shared 2-CPU CI box inflates one sample, not the gate decision.
+    Byte-identity and egress are checked on EVERY repeat."""
+    rows = []
+    report = {"nodes": [], "max_ratio_gate": max_ratio,
+              "repeats": repeats}
+    worst_gated = 0.0
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        rng = np.random.default_rng(0)
+        reg, hdfs, ck = _build_world(root, rng)
+        unique_bytes = sum(
+            len(reg.get_block(h))
+            for h in reg.get_manifest("img").unique_blocks)
+        reg.stats["bytes_served"] = 0    # exclude the sizing pass
+        hot_root = root / "hot"
+        # record phase once: evolving hot-block record + env cache land on
+        # shared storage, exactly like a production record run
+        with BootseerRuntime(registry=reg, hdfs=hdfs, workdir=root / "w0",
+                             optimize=True, hot_root=hot_root) as rt:
+            rt.run_startup(_spec(1), checkpointer=ck)
+            rt.drain_deferred()
+
+        for n in nodes:
+            seq_s, pipe_s = [], []
+            egress_ratio = 0.0
+            pipe = None
+            for rep in range(max(repeats, 1)):
+                seq = _one_mode(root, reg, hdfs, ck, hot_root, n, False,
+                                rep)
+                pipe = _one_mode(root, reg, hdfs, ck, hot_root, n, True,
+                                 rep)
+                if not (seq["prefetch_used"] and pipe["prefetch_used"]):
+                    # a bare assert would vanish under python -O and let
+                    # the gate pass on a broken (cold) warm path
+                    raise SystemExit(
+                        f"warm-path precondition broken at n={n} "
+                        f"rep={rep}: hot record not visible "
+                        "(prefetch_used False) — measuring a record run "
+                        "as the warm cell would invalidate the gate")
+                seq_s.append(seq["total_s"])
+                pipe_s.append(pipe["total_s"])
+                egress_ratio = max(
+                    egress_ratio,
+                    max(seq["registry_egress"],
+                        pipe["registry_egress"]) / unique_bytes)
+                if seq["state"] != pipe["state"] or \
+                        seq["dfs_read_bytes"] != pipe["dfs_read_bytes"]:
+                    raise SystemExit(
+                        f"BYTE MISMATCH at n={n} rep={rep}: pipelined "
+                        "and sequential startups must produce identical "
+                        "on-disk state")
+                if egress_ratio > 1.2:
+                    raise SystemExit(
+                        f"registry egress blew the swarm budget at "
+                        f"n={n}: x{egress_ratio:.2f} unique bytes "
+                        "(cap 1.2)")
+            best_seq, best_pipe = min(seq_s), min(pipe_s)
+            ratio = best_pipe / max(best_seq, 1e-9)
+            cell = {
+                "n": n,
+                "sequential_s": round(best_seq, 4),
+                "pipelined_s": round(best_pipe, 4),
+                "ratio": round(ratio, 4),
+                "samples": {"sequential": [round(s, 4) for s in seq_s],
+                            "pipelined": [round(s, 4) for s in pipe_s]},
+                "identical_files": True,
+                "identical_dfs_bytes": True,
+                "files_hashed": len(pipe["state"]),
+                "registry_egress_ratio": round(egress_ratio, 3),
+                "gating_counts": pipe["gating"],
+            }
+            report["nodes"].append(cell)
+            rows.append((f"pipeline.warm_ratio.n{n}", round(ratio, 3),
+                         f"seq {best_seq:.2f}s -> pipe {best_pipe:.2f}s "
+                         f"(best of {repeats}); identical=True "
+                         f"egress x{egress_ratio:.2f}"))
+            if max_ratio is not None and n >= 8:
+                worst_gated = max(worst_gated, ratio)
+    emit(rows, f"Pipelined vs sequential warm startup (nodes {list(nodes)})")
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+    if max_ratio is not None and worst_gated > max_ratio:
+        print(f"REGRESSION: pipelined/sequential walltime ratio "
+              f"{worst_gated:.3f} > gate {max_ratio}")
+        raise SystemExit(2)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, nargs="*",
+                    default=[1, 2, 4, 8, 16, 32])
+    ap.add_argument("--json", default="")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail (exit 2) if the n>=8 pipelined/sequential "
+                         "walltime ratio exceeds this")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="runs per (mode, n) cell; walltimes are the min")
+    args = ap.parse_args()
+    run(nodes=tuple(args.nodes), json_path=args.json or None,
+        max_ratio=args.max_ratio, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

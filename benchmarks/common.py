@@ -2,9 +2,27 @@
 
 from __future__ import annotations
 
+import hashlib
 import statistics
 import time
 from contextlib import contextmanager
+from pathlib import Path
+
+
+def hash_tree(root: Path) -> dict:
+    """{relative path: sha256 hex} over every regular file under ``root``
+    (empty when the directory is missing) — the byte-identity contract
+    shared by bench_pipeline's gate and the pipelined==sequential
+    equivalence test."""
+    out = {}
+    root = Path(root)
+    if not root.exists():
+        return out
+    for p in sorted(root.rglob("*")):
+        if p.is_file():
+            out[str(p.relative_to(root))] = hashlib.sha256(
+                p.read_bytes()).hexdigest()
+    return out
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

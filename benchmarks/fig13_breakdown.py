@@ -1,7 +1,11 @@
 """Fig. 13 — per-stage startup improvement breakdown (paper: image 4-10x,
-env ~2x, model-init ~1.6x, across 16..128 GPUs)."""
+env ~2x, model-init ~1.6x, across 16..128 GPUs), extended with the
+pipelined-DAG critical-path attribution: per scale, which task chain
+actually gated TRAINING (and on what fraction of nodes) — the breakdown
+that tells you what to optimize NEXT once the stages overlap."""
 
 from repro.core.stages import Stage
+from repro.core.straggler import gating_share
 from repro.simcluster.workload import StartupWorkload
 
 from benchmarks.common import emit
@@ -19,7 +23,18 @@ def run(seed: int = 1):
             o = max(opt["stages"][s.value].values())
             rows.append((f"fig13.{s.value}.{gpus}gpus",
                          f"{b:.1f}->{o:.1f}", f"x{b / o:.2f}"))
-    return emit(rows, "Fig.13 per-stage improvement breakdown")
+        # critical-path attribution (pipelined warm startup): per task,
+        # the share of nodes whose gating chain it DOMINATES (largest
+        # link — the thing to optimize next) — consumed straight from
+        # the workload's per-node attribution, same shape as
+        # StartupResult.notes["critical_path"]
+        for task, frac in gating_share(opt["critical_path"]).items():
+            rows.append((f"fig13.gating.{gpus}gpus.{task}",
+                         round(frac, 3),
+                         "share of nodes whose gating chain this "
+                         "task dominates"))
+    return emit(rows, "Fig.13 per-stage improvement breakdown "
+                      "+ critical-path attribution")
 
 
 if __name__ == "__main__":

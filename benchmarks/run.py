@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_striped_io",
     "benchmarks.bench_resume",
     "benchmarks.bench_swarm",
+    "benchmarks.bench_pipeline",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
     "benchmarks.beyond_paper",

@@ -29,7 +29,7 @@ class LazyImageClient:
                  cache_dir: str | Path, *, node_id: str = "node0",
                  peers: Optional["Swarm"] = None,
                  client_id: Optional[str] = None,
-                 peer_replace: bool = False):
+                 peer_replace: bool = False, sched=None):
         self.manifest = manifest
         self.registry = registry
         self.cache_dir = Path(cache_dir)
@@ -37,6 +37,11 @@ class LazyImageClient:
         self.node_id = node_id
         self.client_id = client_id or f"{node_id}:{manifest.digest[:8]}"
         self.peers = peers
+        # optional repro.core.pipeline.IOScheduler: block fetches then
+        # hold one "registry"/"peer" token each, granted by priority —
+        # a DEFERRED cold stream (this run's or a previous run's) can
+        # never queue a CRITICAL hot prefetch behind it
+        self.sched = sched
         self._files = manifest.file_map()
         self._lock = threading.Lock()
         self._trace: list[dict] = []
@@ -63,12 +68,24 @@ class LazyImageClient:
                 if len(p.name) == 64
                 and all(c in "0123456789abcdef" for c in p.name)]
 
-    def _fetch_block(self, h: str) -> bytes:
-        """Peer-first fetch with registry fallback."""
+    def _fetch_block(self, h: str, priority: int = 0) -> bytes:
+        """Peer-first fetch with registry fallback.  With a scheduler
+        attached, a registry fetch holds one "registry" token for the
+        duration of that single block — the cooperative-preemption
+        granularity.  Peer fetches hold NO token: ``Swarm.fetch`` can
+        park a caller in a singleflight coalesced wait for tens of
+        seconds, and a DEFERRED stream holding a pool token across that
+        wait would convoy later CRITICAL fetches — the very thing the
+        scheduler exists to prevent.  Peer-link concurrency is already
+        bounded inside the swarm (per-holder ``serve_slots``); the
+        scheduler's "peer" resource keeps the per-priority byte
+        accounting role only."""
         if self.peers is not None:
             data = self.peers.fetch(h, requester=self)
             if data is not None:
                 self.stats["peer_fetches"] += 1
+                if self.sched is not None:
+                    self.sched.account("peer", priority, len(data))
                 self._store(h, data)
                 # announce: this client is now a holder too, so the
                 # dissemination tree fans out instead of pinning the seed
@@ -82,7 +99,12 @@ class LazyImageClient:
                 self.stats["hits"] += 1
                 return self.get_cached_block(h)
         try:
-            data = self.registry.get_block(h)
+            if self.sched is not None:
+                with self.sched.slot("registry", priority=priority):
+                    data = self.registry.get_block(h)
+                self.sched.account("registry", priority, len(data))
+            else:
+                data = self.registry.get_block(h)
         except BaseException:
             if self.peers is not None:
                 # we may be the fetcher-of-record: wake coalesced waiters
@@ -114,13 +136,14 @@ class LazyImageClient:
         return True
 
     def ensure_block(self, h: str, *, record: bool = False,
-                     file_path: str = "", block_idx: int = -1) -> bytes:
+                     file_path: str = "", block_idx: int = -1,
+                     priority: int = 0) -> bytes:
         if self.has_block(h):
             self.stats["hits"] += 1
             data = self.get_cached_block(h)
         else:
             self.stats["misses"] += 1
-            data = self._fetch_block(h)
+            data = self._fetch_block(h, priority)
         if record:
             with self._lock:
                 self._trace.append({

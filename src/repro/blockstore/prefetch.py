@@ -126,7 +126,12 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
 
     Hot blocks stream in recorded first-touch order (startup-critical);
     cold blocks stream rarest-first when the client is swarm-attached.
+    With a scheduler attached to the client, hot fetches run at CRITICAL
+    priority and the cold remainder at DEFERRED — one token per block, so
+    cold streams yield to any later run's hot prefetch block-by-block.
     """
+    from repro.core.pipeline import DEFERRED
+
     digest = client.manifest.digest
     hot = [h for h in service.hot_blocks(digest) if not client.has_block(h)]
     t0 = time.perf_counter()
@@ -141,6 +146,9 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
             list(ex.map(client.ensure_block, hot))
     hot_s = time.perf_counter() - t0
     hot_set = set(hot)
+
+    def ensure_cold(h):
+        return client.ensure_block(h, priority=DEFERRED)
 
     def cold_order(hashes):
         rarest = getattr(client.peers, "rarest_first", None)
@@ -158,7 +166,7 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
             todo = [h for h in client.manifest.unique_blocks
                     if h not in hot_set and not client.has_block(h)]
             for h in cold_order(todo):
-                client.ensure_block(h)
+                ensure_cold(h)
             marker.touch()
         return hot_s, stream_later
 
@@ -171,10 +179,10 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
             # block — do it on the streaming side, never on the critical
             # path between the hot phase and returning to the caller
             if pool is not None:
-                list(pool.map(client.ensure_block, cold_order(cold)))
+                list(pool.map(ensure_cold, cold_order(cold)))
             else:
                 with ThreadPoolExecutor(min(cold_threads, len(cold))) as ex:
-                    list(ex.map(client.ensure_block, cold_order(cold)))
+                    list(ex.map(ensure_cold, cold_order(cold)))
         if background_cold:
             bg = threading.Thread(target=stream, daemon=True)
             bg.start()

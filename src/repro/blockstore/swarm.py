@@ -30,6 +30,7 @@ with a topology-aware swarm:
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
@@ -38,6 +39,12 @@ from typing import Callable, Iterable, Optional
 def _client_id(client) -> str:
     cid = getattr(client, "client_id", None)
     return cid if cid is not None else client.node_id
+
+
+def _ewma(prev: float, sample: float, alpha: float) -> float:
+    """Exponentially-weighted moving average; 0.0 means "no samples yet"
+    (serve latencies are strictly positive), so the first sample seeds."""
+    return sample if prev == 0.0 else (1 - alpha) * prev + alpha * sample
 
 
 @dataclass
@@ -110,11 +117,18 @@ class Swarm:
     def __init__(self, topology: Optional[Topology] = None, *,
                  serve_slots: int = 4, wait_timeout: float = 10.0,
                  max_wait_rounds: int = 3, nshards: int = 16,
-                 intra_rack=None, cross_rack=None):
+                 intra_rack=None, cross_rack=None,
+                 latency_alpha: float = 0.3):
         self.topology = topology or Topology()
         self.serve_slots = serve_slots
         self.wait_timeout = wait_timeout
         self.max_wait_rounds = max_wait_rounds
+        # EWMA smoothing for observed per-peer serve latency (0 < a <= 1;
+        # higher = reacts faster to a peer going slow)
+        if not 0.0 < latency_alpha <= 1.0:
+            raise ValueError(
+                f"latency_alpha must be in (0, 1], got {latency_alpha}")
+        self.latency_alpha = latency_alpha
         self._shards = [_Shard() for _ in range(max(nshards, 1))]
         self._meta = threading.Lock()            # membership only
         self._stats = threading.Lock()           # per-serve accounting
@@ -122,11 +136,14 @@ class Swarm:
         self._clients: dict[str, object] = {}
         self._racks: dict[str, str] = {}         # client_id -> rack
         self._sems: dict[str, threading.Semaphore] = {}
-        # client_id -> {"blocks_served", "bytes_served", "active_serves"}
+        # client_id -> {"blocks_served", "bytes_served", "active_serves",
+        #               "serve_latency_ewma_s"}
         self.stats: dict[str, dict] = {}
         self.link_stats = {
-            "intra_rack": {"blocks": 0, "bytes": 0},
-            "cross_rack": {"blocks": 0, "bytes": 0},
+            "intra_rack": {"blocks": 0, "bytes": 0,
+                           "serve_latency_ewma_s": 0.0},
+            "cross_rack": {"blocks": 0, "bytes": 0,
+                           "serve_latency_ewma_s": 0.0},
         }
         self.coalesced_fetches = 0
         self.rearmed_fetches = 0
@@ -151,7 +168,8 @@ class Swarm:
             self._sems.setdefault(cid, threading.Semaphore(self.serve_slots))
             self.stats.setdefault(cid, {"blocks_served": 0,
                                         "bytes_served": 0,
-                                        "active_serves": 0})
+                                        "active_serves": 0,
+                                        "serve_latency_ewma_s": 0.0})
         have = getattr(client, "cached_hashes", None)
         if have is not None:
             self.announce(client, have())
@@ -244,12 +262,18 @@ class Swarm:
         remaining = list(holder_ids)
         while remaining:
             # single O(H) min scan under the (serve-only) stats lock —
-            # the fetch/index path never touches this lock
+            # the fetch/index path never touches this lock.  Peer choice
+            # is bandwidth-aware: same rack first, then the least-loaded
+            # peer with the LOWEST observed serve latency (EWMA) — a peer
+            # that has gone slow (congested uplink, busy disk) sheds load
+            # to faster holders instead of keeping its byte-count-based
+            # share.  Fresh peers (no samples) score 0 and get probed.
             with self._stats:
                 def load(c):
                     st = self.stats.get(c, {})
                     return (self._racks.get(c) != req_rack,
                             st.get("active_serves", 0),
+                            st.get("serve_latency_ewma_s", 0.0),
                             st.get("bytes_served", 0))
                 peer_id = min(remaining, key=load)
                 remaining.remove(peer_id)
@@ -260,15 +284,31 @@ class Swarm:
             if peer is None:
                 self._drop_holder(h, peer_id)
                 continue
+            t0 = time.perf_counter()
+            data = None
             try:
                 with sem:
                     data = peer.get_cached_block(h)
             except OSError:
                 self._drop_holder(h, peer_id)
-                continue
             finally:
+                serve_s = time.perf_counter() - t0
                 with self._stats:
-                    self.stats[peer_id]["active_serves"] -= 1
+                    st = self.stats[peer_id]
+                    # always decremented — any exception type must not
+                    # leave the peer permanently "busy" in the shared
+                    # runtime-level swarm
+                    st["active_serves"] -= 1
+                    if data is not None:
+                        # only SUCCESSFUL serves feed the EWMA: an
+                        # instant failure would read as "fast" and make
+                        # a broken peer the most preferred holder of
+                        # everything else it is indexed for
+                        st["serve_latency_ewma_s"] = _ewma(
+                            st.get("serve_latency_ewma_s", 0.0),
+                            serve_s, self.latency_alpha)
+            if data is None:
+                continue
             link = ("intra_rack" if self._racks.get(peer_id) == req_rack
                     else "cross_rack")
             throttle = self._throttles.get(link)
@@ -281,6 +321,9 @@ class Swarm:
                 ls = self.link_stats[link]
                 ls["blocks"] += 1
                 ls["bytes"] += len(data)
+                ls["serve_latency_ewma_s"] = _ewma(
+                    ls.get("serve_latency_ewma_s", 0.0), serve_s,
+                    self.latency_alpha)
             return data
         return None
 

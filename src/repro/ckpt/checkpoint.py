@@ -58,7 +58,7 @@ class _PlainReader:
     def pread(self, off: int, ln: int) -> bytes:
         return self._hdfs.pread(self._path, off, ln)
 
-    def pread_many(self, ranges, into=None):
+    def pread_many(self, ranges, into=None, priority=None):
         from repro.dfs.striped import pread_many_fallback
         return pread_many_fallback(self.pread, ranges, into=into)
 
@@ -123,11 +123,16 @@ class Checkpointer:
         return TensorIndex.from_json(
             self.hdfs.read(self.index_path(step)).decode())
 
-    def _reader(self, step: int):
+    def _reader(self, step: int, *, sched=None, priority: int = 0):
+        """Range reader for ``step``'s data stream.  ``sched``/``priority``
+        attach a ``repro.core.pipeline.IOScheduler``: striped preads then
+        hold per-file "dfs" tokens so restore waves of different priority
+        classes share the DFS without convoying each other."""
         attrs = self.hdfs.attrs(self.data_path(step))
         if "striped" in attrs:
             return StripedReader(self.hdfs, self.data_path(step),
-                                 threads=self.threads)
+                                 threads=self.threads, sched=sched,
+                                 priority=priority)
         return _PlainReader(self.hdfs, self.data_path(step))
 
     def _dim_slices(self, index: TensorIndex, likes: tuple, *,

@@ -263,12 +263,13 @@ def plan_for_rank(index: TensorIndex, rank: int, nodes: int,
 # execution
 # ---------------------------------------------------------------------------
 
-def _checked_pread_many(reader, ranges, into) -> None:
+def _checked_pread_many(reader, ranges, into, priority=None) -> None:
     """Issue a batched read and fail loudly on short reads: plan offsets
     always lie inside the checkpoint stream, so a short count means a
     truncated data file — returning it as tensor bytes would silently
     resume from garbage."""
-    counts = reader.pread_many(ranges, into=into)
+    kw = {} if priority is None else {"priority": priority}
+    counts = reader.pread_many(ranges, into=into, **kw)
     for (off, ln), got in zip(ranges, counts):
         if got != ln:
             raise IOError(
@@ -313,12 +314,16 @@ def execute_plan(reader, plan: RestorePlan) -> list[np.ndarray]:
 
 
 def read_plan(reader, plan: RestorePlan, *,
-              batch_bytes: int = 4 * DEFAULT_MAX_READ) -> int:
+              batch_bytes: int = 4 * DEFAULT_MAX_READ,
+              priority: Optional[int] = None) -> int:
     """Execute only the I/O of a plan (no tensor materialization) — the
     startup-critical resume read in the BootSeer runtime.  Ops are issued
     in batches whose throwaway buffers total at most ``batch_bytes``, so N
     concurrent node restores peak at ~N x batch_bytes transient memory
-    instead of N x checkpoint_size.  Returns the number of bytes read."""
+    instead of N x checkpoint_size.  Batching also bounds how long one
+    scheduler token is held: with a ``priority``-aware reader, a DEFERRED
+    opt-state wave yields to CRITICAL reads at batch granularity.
+    Returns the number of bytes read."""
     ops = plan.reads
     i = 0
     while i < len(ops):
@@ -329,6 +334,7 @@ def read_plan(reader, plan: RestorePlan, *,
         _checked_pread_many(reader,
                             [(op.offset, op.length) for op in ops[i:j]],
                             [np.empty(op.length, np.uint8)
-                             for op in ops[i:j]])
+                             for op in ops[i:j]],
+                            priority=priority)
         i = j
     return plan.planned_bytes

@@ -1,7 +1,23 @@
 """The BootSeer runtime: executes a job's Worker-Phase startup on N (thread)
 worker nodes with REAL I/O — lazy/prefetched image loading, env setup vs
 env-cache restore, plain vs striped checkpoint resumption — every stage
-profiled through the §4.1 logging system, with the §2.2 sync barriers.
+profiled through the §4.1 logging system.
+
+Startup is a per-node task DAG (repro.core.pipeline), not a barrier-per-
+stage pipeline: env-cache restore and the checkpoint params wave depend
+only on DFS availability, so under the pipelined executor their striped
+reads start at t=0 and overlap the swarm image fetch; ``env.install`` (the
+real pip-install fallback) is the only task that truly needs the container
+image.  The only remaining cross-node syncs are the single pre-TRAINING
+event and the record-phase fences (trace capture inside rank 0's
+``image.startup_reads``, env-cache creation inside rank 0's
+``env.install``), which are ordinary DAG edges rather than
+``threading.Barrier`` walls.  All engine I/O goes through one shared
+priority-aware :class:`~repro.core.pipeline.IOScheduler`, so deferred
+streams (cold image blocks, the optimizer-state restore wave) can never
+convoy a critical-path read.  ``pipeline=False`` keeps the seed's
+barrier-per-stage schedule over the *same task bodies* — the measurable
+baseline of ``benchmarks/bench_pipeline.py``.
 
 This is the "real-IO mode" of DESIGN.md: the same optimizations the paper
 deploys, exercised at laptop scale by tests, examples and the §5 benchmark
@@ -12,7 +28,6 @@ shared-resource contention explicitly.
 
 from __future__ import annotations
 
-import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -23,8 +38,10 @@ from repro.blockstore.lazy import LazyImageClient
 from repro.blockstore.prefetch import HotBlockService, prefetch_image
 from repro.blockstore.registry import Registry
 from repro.blockstore.swarm import Swarm, Topology
+from repro.core.pipeline import (CRITICAL, DEFERRED, IOScheduler, TaskSpec,
+                                 attribution, gating_counts, run_node_dags)
 from repro.core.profiler import StageAnalysisService, StageLogger
-from repro.core.stages import Stage
+from repro.core.stages import Stage, StartupTask
 from repro.dfs.fuse import HdfsFuseMount
 from repro.dfs.hdfs import HdfsCluster
 from repro.envcache.snapshot import EnvCache, job_cache_key, snapshot_dir
@@ -55,11 +72,21 @@ class JobSpec:
 
 @dataclass
 class StartupResult:
+    """One startup's profile.  ``notes["io_sched"]`` holds the runtime's
+    scheduler counters, which are CUMULATIVE over the runtime's lifetime
+    (the scheduler is shared across runs so cross-run priority holds);
+    per-run figures are deltas against the previous run's snapshot."""
+
     job_id: str
     run_idx: int
     node_stage_s: dict               # node -> stage -> seconds
     total_s: float
     notes: dict = field(default_factory=dict)
+
+    def critical_path(self, node: str) -> list:
+        """The task chain that gated ``node``'s TRAINING start."""
+        return self.notes.get("critical_path", {}).get(node, {}) \
+            .get("chain", [])
 
 
 class BootseerRuntime:
@@ -67,19 +94,36 @@ class BootseerRuntime:
                  workdir: str | Path, optimize: bool = True,
                  analysis: Optional[StageAnalysisService] = None,
                  hot_threads: int = 8, ckpt_threads: int = 8,
-                 stripe_width: int = 8, nodes_per_rack: int = 8):
+                 stripe_width: int = 8, nodes_per_rack: int = 8,
+                 pipeline: bool = True,
+                 hot_root: Optional[str | Path] = None,
+                 io_tokens: Optional[dict] = None):
         self.registry = registry
         self.hdfs = hdfs
         self.mount = HdfsFuseMount(hdfs)
         self.workdir = Path(workdir)
         self.workdir.mkdir(parents=True, exist_ok=True)
         self.optimize = optimize
+        # pipeline=True (+optimize): per-node DAG execution — startup
+        # critical path is the MAX of the overlappable chains.
+        # pipeline=False: the seed's barrier-per-stage schedule over the
+        # same task bodies (the sequential-optimized baseline).
+        self.pipeline = pipeline
         self.analysis = analysis or StageAnalysisService()
-        self.hot_service = HotBlockService(self.workdir / "_hotblocks")
+        # one shared priority-aware I/O scheduler for ALL engines: hot
+        # prefetch, env-archive windows and checkpoint preads run
+        # CRITICAL; cold image streams and the opt-state wave run
+        # DEFERRED and can never queue a critical read behind them
+        self.io_sched = IOScheduler(io_tokens) if optimize else None
+        # hot-block records default inside the workdir but may live on
+        # shared storage (hot_root) so fresh nodes see existing records
+        self.hot_service = HotBlockService(
+            Path(hot_root) if hot_root else self.workdir / "_hotblocks")
         # node-local archive cache: N worker threads restoring the same key
         # cost ONE DFS fetch (singleflight), not N through the shared throttle
         self.env_cache = EnvCache(
-            self.mount, local_cache=self.workdir / "_envcache_local")
+            self.mount, local_cache=self.workdir / "_envcache_local",
+            sched=self.io_sched)
         self.hot_threads = hot_threads
         self.ckpt_threads = ckpt_threads
         self.stripe_width = stripe_width
@@ -145,105 +189,195 @@ class BootseerRuntime:
         self.close()
 
     # ------------------------------------------------------------------
-    def run_startup(self, spec: JobSpec,
-                    checkpointer=None) -> StartupResult:
-        """Execute one Full Startup of ``spec`` across its worker nodes.
+    # the startup task DAG (shared by run_startup and run_hot_update)
+    # ------------------------------------------------------------------
 
-        Raises any failure left behind by a previous run's deferred
-        background work (see :meth:`drain_deferred`) before starting."""
-        self.drain_deferred()
-        run_idx = self._run_counter.get(spec.job_id, 0)
-        self._run_counter[spec.job_id] = run_idx + 1
-        job_tag = f"{spec.job_id}#r{run_idx}"
+    def _node_tasks(self, spec: JobSpec, rank: int, *, job_tag: str,
+                    manifest, checkpointer, trace_holder: dict,
+                    use_prefetch: bool, include_image: bool) -> list:
+        """One node's startup DAG.  Edges are the REAL data dependencies:
+
+            image.hot_prefetch ─→ image.startup_reads ─→ env.install
+                                        (container)        ↑
+            env.restore (DFS only, t=0) ───────────────────┘
+            ckpt.params_wave (DFS only, t=0)
+            image.cold_stream / ckpt.opt_wave: deferred (non-gating)
+
+        A hot update is the sub-graph without the image tasks (container
+        and image survive, so ``env.install`` loses that edge too).
+        """
+        node_dir = self.workdir / job_tag.replace("#", "_") / f"n{rank}"
         n = spec.num_nodes
-        barrier = threading.Barrier(n)
-        peers = self.swarm if self.optimize else None
-        manifest = self.registry.get_manifest(spec.image)
-        loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
-        t_start = time.perf_counter()
-        trace_holder: dict = {}
-        # cold image blocks and the optimizer-state restore wave stream
-        # only after the startup critical path
-        deferred_cold: list = []
-        deferred_lock = threading.Lock()
+        tasks: list[TaskSpec] = []
 
-        def defer(thunk):
-            with deferred_lock:
-                deferred_cold.append(thunk)
+        if include_image:
+            def img_prefetch(deps):
+                node_dir.mkdir(parents=True, exist_ok=True)
+                # the block cache is per JOB+NODE, not per run: image
+                # blocks are content-addressed and immutable, so a node's
+                # local store survives job restarts (warm restarts
+                # re-read, never re-fetch)
+                blocks_dir = (self.workdir / "_blockcache" / spec.job_id
+                              / f"n{rank}")
+                client = LazyImageClient(
+                    manifest, self.registry, blocks_dir,
+                    node_id=f"node{rank:03d}",
+                    peers=self.swarm if self.optimize else None,
+                    client_id=(f"{spec.job_id}/n{rank}:"
+                               f"{manifest.digest[:8]}"),
+                    peer_replace=True, sched=self.io_sched)
+                stream_cold = None
+                if use_prefetch:
+                    _, stream_cold = prefetch_image(
+                        client, self.hot_service,
+                        hot_threads=self.hot_threads,
+                        pool=self._io_pool, defer_cold=True)
+                return {"client": client, "stream_cold": stream_cold}
 
-        def node_main(rank: int):
-            log = loggers[rank]
-            node_dir = self.workdir / job_tag.replace("#", "_") / f"n{rank}"
-            node_dir.mkdir(parents=True, exist_ok=True)
+            def img_reads(deps):
+                client = deps[StartupTask.IMAGE_HOT_PREFETCH]["client"]
+                # container start: perform the startup file reads
+                for path, off, ln in spec.startup_reads:
+                    client.read_file(path, off, ln)
+                if self.optimize and rank == 0 and not use_prefetch:
+                    # record-phase fence: the trace is cut exactly when
+                    # rank 0's startup reads complete
+                    trace_holder["trace"] = client.access_trace()
+                return client
 
-            # ---- Image Loading ----
-            log.begin(Stage.IMAGE_LOAD)
-            # the block cache is per JOB+NODE, not per run: image blocks are
-            # content-addressed and immutable, so a node's local store
-            # survives job restarts (warm restarts re-read, never re-fetch)
-            blocks_dir = (self.workdir / "_blockcache" / spec.job_id
-                          / f"n{rank}")
-            client = LazyImageClient(
-                manifest, self.registry, blocks_dir,
-                node_id=f"node{rank:03d}", peers=peers,
-                client_id=(f"{spec.job_id}/n{rank}:"
-                           f"{manifest.digest[:8]}"),
-                peer_replace=True)
-            use_prefetch = (self.optimize
-                            and self.hot_service.has_record(manifest.digest))
+            def img_cold(deps):
+                stream = deps[StartupTask.IMAGE_HOT_PREFETCH]["stream_cold"]
+                if stream is not None:
+                    stream()
+
+            tasks.append(TaskSpec(StartupTask.IMAGE_HOT_PREFETCH,
+                                  img_prefetch, stage=Stage.IMAGE_LOAD))
+            tasks.append(TaskSpec(StartupTask.IMAGE_STARTUP_READS,
+                                  img_reads,
+                                  deps=(StartupTask.IMAGE_HOT_PREFETCH,),
+                                  stage=Stage.IMAGE_LOAD))
             if use_prefetch:
-                _, stream_cold = prefetch_image(
-                    client, self.hot_service, hot_threads=self.hot_threads,
-                    pool=self._io_pool, defer_cold=True)
-                if stream_cold is not None:
-                    with deferred_lock:
-                        deferred_cold.append(stream_cold)
-            # container start: perform the startup file reads
-            for path, off, ln in spec.startup_reads:
-                client.read_file(path, off, ln)
-            if self.optimize and rank == 0 and not use_prefetch:
-                # record phase: first run with this image
-                trace_holder["trace"] = client.access_trace()
-            log.end(Stage.IMAGE_LOAD)
-            barrier.wait()
+                tasks.append(TaskSpec(StartupTask.IMAGE_COLD_STREAM,
+                                      img_cold,
+                                      deps=(StartupTask.IMAGE_HOT_PREFETCH,),
+                                      stage=Stage.IMAGE_LOAD, gating=False))
 
-            # ---- Environment Setup ----
-            log.begin(Stage.ENV_SETUP)
+        def env_restore(deps):
+            # depends only on DFS availability — NOT on the image: under
+            # the pipelined executor this striped fetch starts at t=0
+            node_dir.mkdir(parents=True, exist_ok=True)
             target = node_dir / "site-packages"
             target.mkdir(exist_ok=True)
+            if not self.optimize:
+                return None
             key = job_cache_key(spec.job_params)
-            restored = None
-            if self.optimize:
-                restored = self.env_cache.restore(key, target)
+            return self.env_cache.restore(key, target, priority=CRITICAL)
+
+        def env_install(deps):
+            # the real install commands run INSIDE the container, so this
+            # is the one env task that truly needs the image
+            restored = deps[StartupTask.ENV_RESTORE]
+            target = node_dir / "site-packages"
             if restored is None and spec.env_setup is not None:
                 before = snapshot_dir(target)
                 spec.env_setup(target, rank)
                 if self.optimize and rank == 0:
-                    self.env_cache.create(key, target, before,
-                                          spec.job_params)
-            log.end(Stage.ENV_SETUP)
-            barrier.wait()
+                    # record-phase fence: rank 0 snapshots its own install
+                    self.env_cache.create(job_cache_key(spec.job_params),
+                                          target, before, spec.job_params)
+            return restored is not None
 
-            # ---- Model Initialization ----
-            log.begin(Stage.MODEL_INIT)
-            if spec.resume_step is not None and checkpointer is not None:
-                # wave 0 (params) reads on the critical path; wave 1
-                # (optimizer state) streams deferred, overlapping training
-                planned_restore_bytes(
-                    checkpointer, spec.resume_step, rank=rank, nodes=n,
-                    resume_plan=spec.resume_plan,
-                    defer=defer if self.optimize else None)
-            log.end(Stage.MODEL_INIT)
-            barrier.wait()
-            log.begin(Stage.TRAINING)
+        install_deps = (StartupTask.ENV_RESTORE,)
+        if include_image:
+            install_deps += (StartupTask.IMAGE_STARTUP_READS,)
+        tasks.append(TaskSpec(StartupTask.ENV_RESTORE, env_restore,
+                              stage=Stage.ENV_SETUP))
+        tasks.append(TaskSpec(StartupTask.ENV_INSTALL, env_install,
+                              deps=install_deps, stage=Stage.ENV_SETUP))
 
-        with ThreadPoolExecutor(n) as ex:
-            list(ex.map(node_main, range(n)))
-        total = time.perf_counter() - t_start
-        # startup done: stream the cold image remainder (and any deferred
-        # optimizer-state restore waves) while training runs
-        for thunk in deferred_cold:
-            self._submit_deferred(thunk)
+        def ckpt_params(deps):
+            # wave-0 (params) preads depend only on DFS availability:
+            # they start at t=0 and overlap the image fetch
+            if spec.resume_step is None or checkpointer is None:
+                return None
+            from repro.ckpt.plan import read_plan
+            reader, plans = _restore_plans(
+                checkpointer, spec.resume_step, rank=rank, nodes=n,
+                resume_plan=spec.resume_plan, sched=self.io_sched)
+            if not plans:
+                return None
+            read_plan(reader, plans[0], priority=CRITICAL)
+            if not self.optimize:
+                # baseline: both waves block model init, as the paper's
+                # unoptimized runtime does
+                for p in plans[1:]:
+                    read_plan(reader, p)
+                return None
+            return (reader, plans[1:])
+
+        def ckpt_opt(deps):
+            handle = deps[StartupTask.CKPT_PARAMS_WAVE]
+            if not handle:
+                return 0
+            from repro.ckpt.plan import read_plan
+            reader, tail = handle
+            return sum(read_plan(reader, p, priority=DEFERRED)
+                       for p in tail)
+
+        tasks.append(TaskSpec(StartupTask.CKPT_PARAMS_WAVE, ckpt_params,
+                              stage=Stage.MODEL_INIT))
+        if self.optimize and spec.resume_step is not None \
+                and checkpointer is not None:
+            tasks.append(TaskSpec(StartupTask.CKPT_OPT_WAVE, ckpt_opt,
+                                  deps=(StartupTask.CKPT_PARAMS_WAVE,),
+                                  stage=Stage.MODEL_INIT, gating=False))
+        return tasks
+
+    def _run(self, spec: JobSpec, checkpointer, *, include_image: bool,
+             tag: str) -> StartupResult:
+        self.drain_deferred()
+        run_idx = self._run_counter.get(spec.job_id, 0)
+        self._run_counter[spec.job_id] = run_idx + 1
+        job_tag = f"{spec.job_id}#{tag}{run_idx}"
+        n = spec.num_nodes
+        manifest = self.registry.get_manifest(spec.image) \
+            if include_image else None
+        # captured BEFORE the run: has_record() flips during the record
+        # phase, so re-querying afterwards would misreport the first run
+        use_prefetch = bool(include_image and self.optimize
+                            and self.hot_service.has_record(manifest.digest))
+        loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
+        trace_holder: dict = {}
+        pipelined = self.optimize and self.pipeline
+        node_tasks = [
+            self._node_tasks(spec, rank, job_tag=job_tag, manifest=manifest,
+                             checkpointer=checkpointer,
+                             trace_holder=trace_holder,
+                             use_prefetch=use_prefetch,
+                             include_image=include_image)
+            for rank in range(n)]
+
+        t_zero = time.perf_counter()
+
+        def clock() -> float:
+            # zero-based run clock: task records, stage spans and the
+            # TRAINING event all share the run-start epoch, so recorded
+            # timestamps read directly as "seconds into this startup"
+            return time.perf_counter() - t_zero
+
+        results = run_node_dags(node_tasks, pipelined=pipelined,
+                                loggers=loggers, clock=clock)
+        # the ONE remaining cross-node sync: every node's gating chains
+        # are done, so TRAINING begins everywhere at the same instant
+        total = clock()
+        for log in loggers:
+            log.begin(Stage.TRAINING, ts=total)
+
+        # startup done: deferred DAG tasks (cold image remainder,
+        # optimizer-state restore waves) stream while training runs
+        for res in results:
+            for _name, thunk in res.deferred:
+                self._submit_deferred(thunk)
 
         # record phase upload (first optimized run)
         if "trace" in trace_holder:
@@ -252,83 +386,64 @@ class BootseerRuntime:
 
         for log in loggers:
             self.analysis.ingest_log(log.lines())
+        crit = {f"node{i:03d}": attribution(res)
+                for i, res in enumerate(results)}
+        notes = {"optimized": self.optimize, "pipelined": pipelined,
+                 "prefetch_used": use_prefetch,
+                 "critical_path": crit,
+                 "gating_counts": gating_counts(crit)}
+        if self.io_sched is not None:
+            notes["io_sched"] = self.io_sched.snapshot()
+        if not include_image:
+            notes["hot_update"] = True
         return StartupResult(
             job_id=spec.job_id, run_idx=run_idx,
             node_stage_s=self.analysis.node_stage_durations(job_tag),
-            total_s=total,
-            notes={"optimized": self.optimize,
-                   "prefetch_used": self.hot_service.has_record(
-                       manifest.digest)})
+            total_s=total, notes=notes)
+
+    # ------------------------------------------------------------------
+    def run_startup(self, spec: JobSpec,
+                    checkpointer=None) -> StartupResult:
+        """Execute one Full Startup of ``spec`` across its worker nodes.
+
+        Raises any failure left behind by a previous run's deferred
+        background work (see :meth:`drain_deferred`) before starting."""
+        return self._run(spec, checkpointer, include_image=True, tag="r")
 
     # ------------------------------------------------------------------
     def run_hot_update(self, spec: JobSpec,
                        checkpointer=None) -> StartupResult:
         """Hot Update (§2.2): a PARTIAL startup — container and image stay,
         but the environment is set up again and the model re-initialized.
-        Profiled like a full startup minus IMAGE_LOAD."""
-        self.drain_deferred()
-        run_idx = self._run_counter.get(spec.job_id, 0)
-        self._run_counter[spec.job_id] = run_idx + 1
-        job_tag = f"{spec.job_id}#h{run_idx}"
-        n = spec.num_nodes
-        barrier = threading.Barrier(n)
-        loggers = [StageLogger(job_tag, f"node{i:03d}") for i in range(n)]
-        t_start = time.perf_counter()
-        deferred: list = []
-        deferred_lock = threading.Lock()
+        The same DAG executor runs the sub-graph without the image tasks
+        (``env.install`` keeps only its ``env.restore`` edge)."""
+        return self._run(spec, checkpointer, include_image=False, tag="h")
 
-        def defer(thunk):
-            with deferred_lock:
-                deferred.append(thunk)
 
-        def node_main(rank: int):
-            log = loggers[rank]
-            node_dir = self.workdir / job_tag.replace("#", "_") / f"n{rank}"
-            node_dir.mkdir(parents=True, exist_ok=True)
+def _restore_plans(checkpointer, step: int, *, rank: int, nodes: int,
+                   resume_plan: Any = "full", sched=None):
+    """Resolve ``resume_plan`` into (reader, per-wave RestorePlans)."""
+    from repro.ckpt.plan import plan_for_rank
 
-            log.begin(Stage.ENV_SETUP)
-            target = node_dir / "site-packages"
-            target.mkdir(exist_ok=True)
-            key = job_cache_key(spec.job_params)
-            restored = self.env_cache.restore(key, target) \
-                if self.optimize else None
-            if restored is None and spec.env_setup is not None:
-                before = snapshot_dir(target)
-                spec.env_setup(target, rank)
-                if self.optimize and rank == 0:
-                    self.env_cache.create(key, target, before,
-                                          spec.job_params)
-            log.end(Stage.ENV_SETUP)
-            barrier.wait()
-
-            log.begin(Stage.MODEL_INIT)
-            if spec.resume_step is not None and checkpointer is not None:
-                planned_restore_bytes(
-                    checkpointer, spec.resume_step, rank=rank, nodes=n,
-                    resume_plan=spec.resume_plan,
-                    defer=defer if self.optimize else None)
-            log.end(Stage.MODEL_INIT)
-            barrier.wait()
-            log.begin(Stage.TRAINING)
-
-        with ThreadPoolExecutor(n) as ex:
-            list(ex.map(node_main, range(n)))
-        total = time.perf_counter() - t_start
-        # optimizer-state restore waves stream after the critical path
-        for thunk in deferred:
-            self._submit_deferred(thunk)
-        for log in loggers:
-            self.analysis.ingest_log(log.lines())
-        return StartupResult(
-            job_id=spec.job_id, run_idx=run_idx,
-            node_stage_s=self.analysis.node_stage_durations(job_tag),
-            total_s=total, notes={"optimized": self.optimize,
-                                  "hot_update": True})
+    index = checkpointer.load_index(step)
+    reader = checkpointer._reader(step, sched=sched)
+    if callable(resume_plan):
+        plans = list(resume_plan(index, rank, nodes))
+    else:
+        if resume_plan not in ("full", "rows"):
+            raise ValueError(
+                f"unknown resume_plan {resume_plan!r}; expected 'full', "
+                "'rows', or a callable (index, rank, nodes) -> plans")
+        eff_nodes = nodes if resume_plan == "rows" else 1
+        plans = [plan_for_rank(index, rank, eff_nodes, names=names)
+                 for names in index.wave_names()]
+    return reader, plans
 
 
 def planned_restore_bytes(checkpointer, step: int, *, rank: int, nodes: int,
                           resume_plan: Any = "full",
-                          defer: Optional[Callable] = None) -> int:
+                          defer: Optional[Callable] = None,
+                          sched=None) -> int:
     """Read this node's planned share of the checkpoint (I/O only).
 
     The restore planner (repro.ckpt.plan) turns ``resume_plan`` into
@@ -340,26 +455,18 @@ def planned_restore_bytes(checkpointer, step: int, *, rank: int, nodes: int,
     Returns the bytes read on the critical path (wave 0, plus wave 1 when
     not deferred).
     """
-    from repro.ckpt.plan import plan_for_rank, read_plan
+    from repro.ckpt.plan import read_plan
 
-    index = checkpointer.load_index(step)
-    reader = checkpointer._reader(step)
-    if callable(resume_plan):
-        plans = list(resume_plan(index, rank, nodes))
-    else:
-        if resume_plan not in ("full", "rows"):
-            raise ValueError(
-                f"unknown resume_plan {resume_plan!r}; expected 'full', "
-                "'rows', or a callable (index, rank, nodes) -> plans")
-        eff_nodes = nodes if resume_plan == "rows" else 1
-        plans = [plan_for_rank(index, rank, eff_nodes, names=names)
-                 for names in index.wave_names()]
+    reader, plans = _restore_plans(checkpointer, step, rank=rank,
+                                   nodes=nodes, resume_plan=resume_plan,
+                                   sched=sched)
     if not plans:
         return 0
-    n = read_plan(reader, plans[0])
+    n = read_plan(reader, plans[0], priority=CRITICAL)
     tail = plans[1:]
     if tail and defer is not None:
-        defer(lambda: sum(read_plan(reader, p) for p in tail))
+        defer(lambda: sum(read_plan(reader, p, priority=DEFERRED)
+                          for p in tail))
     else:
         n += sum(read_plan(reader, p) for p in tail)
     return n

@@ -121,9 +121,43 @@ class StageAnalysisService:
 
     def node_level_overhead(self, job: str) -> dict[str, float]:
         """Per node: sum of all startup stage durations (§3 definition —
-        excludes waiting for other nodes)."""
-        return {node: sum(d.values())
+        excludes waiting for other nodes).  Fine-grained ``task:`` spans
+        are excluded: they subdivide the coarse stages and would double
+        count (and, under the pipelined DAG, stages themselves overlap in
+        wall time — this remains a *work* metric, not a span union)."""
+        return {node: sum(v for s, v in d.items()
+                          if not s.startswith("task:"))
                 for node, d in self.node_stage_durations(job).items()}
+
+    def task_spans(self, job: str) -> dict[str, dict[str, tuple]]:
+        """{node: {task name: (begin, end)}} for the pipelined startup
+        DAG's fine-grained ``task:`` spans (empty for pre-DAG logs) — the
+        raw material of critical-path attribution, persisted through
+        ``save``/``load`` like every other span."""
+        out: dict = {}
+        for node, stages in self._spans[job].items():
+            d = {s[len("task:"):]: (span[0], span[1])
+                 for s, span in stages.items()
+                 if s.startswith("task:") and span[0] is not None
+                 and span[1] is not None}
+            if d:
+                out[node] = d
+        return out
+
+    def task_overlap_s(self, job: str) -> dict[str, float]:
+        """Per node: total pairwise overlap seconds between task spans —
+        > 0 proves stages actually ran concurrently (the pipelined-DAG
+        regression metric that replaces brittle wall-clock ratios on
+        GIL-convoy-prone 2-CPU runners)."""
+        out = {}
+        for node, spans in self.task_spans(job).items():
+            xs = sorted(spans.values())
+            total = 0.0
+            for i, (b1, e1) in enumerate(xs):
+                for b2, e2 in xs[i + 1:]:
+                    total += max(0.0, min(e1, e2) - max(b1, b2))
+            out[node] = total
+        return out
 
     def job_level_overhead(self, job: str) -> float:
         """Submission -> training begin (includes barriers/stragglers)."""

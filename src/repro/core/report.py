@@ -42,6 +42,33 @@ def render_job(svc: StageAnalysisService, job: str) -> str:
     return "\n".join(lines)
 
 
+def render_critical_paths(crit: dict) -> str:
+    """Render a ``StartupResult.notes["critical_path"]`` mapping: which
+    task chain gated TRAINING on each node, plus the job-wide share of
+    nodes gated by each dominant task."""
+    from repro.core.straggler import gating_share
+
+    lines = ["== critical-path attribution =="]
+    share = gating_share(crit)
+    if share:
+        lines.append("  share of nodes whose gating chain each task "
+                     "dominates:")
+        for task, frac in share.items():
+            lines.append(f"    {task:<24} {frac:6.0%}")
+    for node in sorted(crit):
+        attr = crit[node]
+        chain = attr.get("chain", [])
+        if not chain:
+            continue
+        dom = attr.get("dominant")
+        parts = " -> ".join(
+            t + ("*" if t == dom else "") for t in chain)
+        lines.append(f"  {node}: {parts}  "
+                     f"(train-ready {attr.get('train_ready_s', 0.0):.2f}s, "
+                     f"* = dominant)")
+    return "\n".join(lines)
+
+
 def render_all(svc: StageAnalysisService) -> str:
     return "\n\n".join(render_job(svc, j) for j in svc.jobs())
 

@@ -36,3 +36,18 @@ def barrier_cost(durations: Sequence[float]) -> float:
         return 0.0
     mx = max(durations)
     return sum(mx - d for d in durations)
+
+
+def gating_share(critical_paths: dict) -> dict:
+    """Per task, the fraction of nodes whose gating chain it DOMINATES
+    (normalized ``repro.core.pipeline.gating_counts``): under the
+    pipelined DAG the straggler question shifts from "which node was
+    slowest" to "which chain kept TRAINING waiting, and which link of it
+    is worth optimizing next"."""
+    from repro.core.pipeline import gating_counts
+
+    counts = gating_counts(critical_paths)
+    total = sum(counts.values())
+    if not total:
+        return {}
+    return {task: n / total for task, n in counts.items()}

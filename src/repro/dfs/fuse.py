@@ -51,11 +51,12 @@ class HdfsFuseFile:
             return self._reader.pread(offset, length)
         return self._mount.hdfs.pread(self.path, offset, length)
 
-    def pread_many(self, ranges, into=None):
+    def pread_many(self, ranges, into=None, priority=None):
         """Batched ranged reads (see ``StripedReader.pread_many``).  Plain
         files fall back to per-range preads with the same return contract."""
         if self._reader is not None:
-            return self._reader.pread_many(ranges, into=into)
+            return self._reader.pread_many(ranges, into=into,
+                                           priority=priority)
         from repro.dfs.striped import pread_many_fallback
         return pread_many_fallback(
             lambda off, ln: self._mount.hdfs.pread(self.path, off, ln),

@@ -54,12 +54,14 @@ class StripeMissingError(RuntimeError):
             f"{detail}")
 
 
-def pread_many_fallback(pread, ranges, into=None):
+def pread_many_fallback(pread, ranges, into=None, priority=None):
     """Per-range ``pread_many`` for non-striped readers, matching
     ``StripedReader.pread_many``'s return contract (bytes list, or byte
     counts with ``into`` buffers filled).  Independent ranges run
     concurrently on the shared I/O pool, so the plain path keeps the
-    multi-tensor fetch parallelism the old restore had."""
+    multi-tensor fetch parallelism the old restore had.  ``priority`` is
+    accepted for signature parity with ``StripedReader.pread_many`` (the
+    plain path is not scheduler-metered)."""
     results: list = [None] * len(ranges)
 
     def one(i):
@@ -230,7 +232,8 @@ class StripedReader:
 
     def __init__(self, hdfs: HdfsCluster, path: str,
                  threads: Optional[int] = None,
-                 pool: Optional[ThreadPoolExecutor] = None):
+                 pool: Optional[ThreadPoolExecutor] = None,
+                 sched=None, priority: int = 0):
         self.hdfs = hdfs
         self.path = path
         raw = hdfs.attrs(path)["striped"]
@@ -239,6 +242,13 @@ class StripedReader:
                                 files=tuple(tuple(f) for f in raw["files"]))
         self.threads = threads or self.meta.width
         self._pool = pool
+        # optional bandwidth-aware scheduler (repro.core.pipeline
+        # IOScheduler): each per-file read job holds one "dfs" token, so
+        # concurrent readers of different priority classes cannot convoy
+        # each other — a CRITICAL params-wave pread is granted the next
+        # free token even when a DEFERRED opt-state wave queued first
+        self.sched = sched
+        self.priority = priority
 
     @property
     def size(self) -> int:
@@ -248,7 +258,8 @@ class StripedReader:
         return self.pread_many([(offset, length)])[0]
 
     def pread_many(self, ranges: Sequence[tuple[int, int]],
-                   into: Optional[Sequence] = None):
+                   into: Optional[Sequence] = None,
+                   priority: Optional[int] = None):
         """Batched positional reads.
 
         ``ranges``: (offset, length) pairs over the logical stream; each is
@@ -256,12 +267,14 @@ class StripedReader:
         ``bytes`` per range.  With ``into`` — parallel writable buffers
         (anything supporting the buffer protocol, e.g. numpy uint8 views) —
         bytes land zero-copy via ``readinto`` and the per-range byte counts
-        are returned.
+        are returned.  ``priority`` overrides the reader's scheduler
+        priority class for this call (ignored without a scheduler).
 
         Raises :class:`StripeMissingError` if a physical stripe file is
         gone or short.
         """
         m = self.meta
+        prio = self.priority if priority is None else priority
         clamped: list[tuple[int, int]] = []
         views: list[Optional[memoryview]] = []
         out: list = []
@@ -305,6 +318,13 @@ class StripedReader:
             jobs[f] = merged
 
         def read_file(f):
+            if self.sched is not None:
+                nbytes = sum(ln for _, ln, _, _ in jobs[f])
+                with self.sched.slot("dfs", priority=prio, nbytes=nbytes):
+                    return read_file_inner(f)
+            return read_file_inner(f)
+
+        def read_file_inner(f):
             group, name = m.files[f]
             n = 0
             try:

@@ -108,16 +108,29 @@ class _WindowedReader(io.RawIOBase):
     width-way-parallel ones.
     """
 
-    def __init__(self, handle, size: int, window: int = FETCH_WINDOW):
+    def __init__(self, handle, size: int, window: int = FETCH_WINDOW,
+                 sched=None, priority: int = 0):
         self._h = handle
         self._size = size
         self._window = max(window, 1)
         self._pos = 0
         self._buf = b""
         self._buf_start = 0
+        # optional IOScheduler: each window fetch holds one "dfs" token,
+        # so archive restores share the DFS with checkpoint preads under
+        # priority order instead of free-for-all
+        self._sched = sched
+        self._priority = priority
 
     def readable(self) -> bool:
         return True
+
+    def _fetch_window(self, pos: int, ln: int) -> bytes:
+        if self._sched is not None:
+            with self._sched.slot("dfs", priority=self._priority,
+                                  nbytes=ln):
+                return self._h.pread(pos, ln)
+        return self._h.pread(pos, ln)
 
     def read(self, n: int = -1) -> bytes:
         if n is None or n < 0:
@@ -127,7 +140,7 @@ class _WindowedReader(io.RawIOBase):
             off = self._pos - self._buf_start
             if not (0 <= off < len(self._buf)):
                 self._buf_start = self._pos
-                self._buf = self._h.pread(
+                self._buf = self._fetch_window(
                     self._pos, min(self._window, self._size - self._pos))
                 if not self._buf:
                     break
@@ -181,11 +194,14 @@ class EnvCache:
     def __init__(self, mount, base: str = "/envcache", *,
                  local_cache: Optional[str | Path] = None,
                  extract_threads: int = 4,
-                 fetch_window: int = FETCH_WINDOW):
+                 fetch_window: int = FETCH_WINDOW, sched=None):
         self.mount = mount  # HdfsFuseMount
         self.base = base.rstrip("/")
         self.extract_threads = max(1, extract_threads)
         self.fetch_window = fetch_window
+        # optional repro.core.pipeline.IOScheduler shared with the other
+        # startup engines (window fetches hold "dfs" tokens)
+        self.sched = sched
         self._local = Path(local_cache) if local_cache else None
         if self._local is not None:
             self._local.mkdir(parents=True, exist_ok=True)
@@ -270,25 +286,26 @@ class EnvCache:
         with self._flight_master:
             return self._in_flight.setdefault(key, threading.Lock())
 
-    def _fetch_archive(self, key: str) -> BinaryIO:
+    def _fetch_archive(self, key: str, priority: int = 0) -> BinaryIO:
         """DFS fetch of the packed blob: width-way-parallel windowed reads."""
         handle = self.mount.open(self._data_path(key))
         with self._flight_master:
             self.stats["dfs_archive_fetches"] += 1
-        return _WindowedReader(handle, len(handle), self.fetch_window)
+        return _WindowedReader(handle, len(handle), self.fetch_window,
+                               sched=self.sched, priority=priority)
 
-    def _open_archive(self, key: str) -> BinaryIO:
+    def _open_archive(self, key: str, priority: int = 0) -> BinaryIO:
         """Packed-archive byte stream: node-local cache file when enabled
         (one DFS fetch per node, singleflight), direct DFS stream otherwise.
         """
         if self._local is None:
-            return self._fetch_archive(key)
+            return self._fetch_archive(key, priority)
         p = self._local_path(key)
         if not p.exists():
             with self._key_lock(key):
                 if not p.exists():
                     tmp = p.with_name(p.name + f".tmp{os.getpid()}")
-                    src = self._fetch_archive(key)
+                    src = self._fetch_archive(key, priority)
                     with open(tmp, "wb") as out:
                         while True:
                             chunk = src.read(self.fetch_window)
@@ -344,19 +361,29 @@ class EnvCache:
         for f in futures:
             f.result()
 
-    def restore(self, key: str, target: str | Path) -> Optional[dict]:
+    def restore(self, key: str, target: str | Path,
+                priority: int = 0) -> Optional[dict]:
         """Extract the cached environment into ``target``.  Returns the cache
         meta, or None when no valid cache exists (caller falls back to the
-        real install commands)."""
+        real install commands).  ``priority`` is the scheduler class the
+        DFS window fetches run under (CRITICAL on the startup path)."""
         if not self.exists(key):
             return None
         with self._flight_master:
             meta = self._meta_cache.get(key)
         if meta is None:
-            meta = json.loads(self.mount.open(self._meta_path(key)).read())
-            with self._flight_master:
-                self._meta_cache[key] = meta
-        packed = self._open_archive(key)
+            # singleflight like the archive fetch: N concurrent restores
+            # cost ONE meta read, not a racy handful (also keeps DFS
+            # read-byte accounting deterministic for the benchmarks)
+            with self._key_lock(key):
+                with self._flight_master:
+                    meta = self._meta_cache.get(key)
+                if meta is None:
+                    meta = json.loads(
+                        self.mount.open(self._meta_path(key)).read())
+                    with self._flight_master:
+                        self._meta_cache[key] = meta
+        packed = self._open_archive(key, priority)
         try:
             try:
                 self._extract_stream(packed, Path(target))
@@ -368,7 +395,7 @@ class EnvCache:
                 # a second failure (bad DFS copy) propagates
                 packed.close()
                 self._local_path(key).unlink(missing_ok=True)
-                packed = self._fetch_archive(key)
+                packed = self._fetch_archive(key, priority)
                 self._extract_stream(packed, Path(target))
         finally:
             packed.close()

@@ -25,6 +25,12 @@ class FluidResource:
     per_client: float                # per-transfer cap (NIC / stream limit)
     throttle_after: int = 1 << 30    # concurrent clients before rate limit
     throttle_factor: float = 1.0     # capacity divisor once throttled
+    # resources sharing a ``share_group`` draw from ONE capacity pool
+    # (declare them with EQUAL capacity — the group uses the first seen)
+    # while each transfer keeps its own resource's per_client cap.  This
+    # is how the overlapped startup sim models two access paths (env
+    # archive windows, striped ckpt reads) hitting the SAME DFS.
+    share_group: Optional[str] = None
 
 
 @dataclass
@@ -56,11 +62,35 @@ def dissemination_waves(n: int, fanout: int) -> list[int]:
     return waves
 
 
+def simulate_overlapped(transfers: list[Transfer]
+                        ) -> dict[str, dict[str, float]]:
+    """One fluid simulation of MANY overlapping startup tasks.
+
+    Transfers carry ``"node|task"`` composite names, so concurrent tasks
+    (image fetch, env-cache restore, checkpoint params wave) contend for
+    their shared ``FluidResource``s inside a SINGLE event simulation —
+    the fluid-model twin of the pipelined startup DAG, where only real
+    data dependencies (not stage barriers) order the I/O.  Returns
+    ``{node: {task: completion_s}}``.
+    """
+    finish = simulate_stage(transfers)
+    out: dict[str, dict[str, float]] = {}
+    for key, t in finish.items():
+        node, _, task = key.partition("|")
+        out.setdefault(node, {})[task] = t
+    return out
+
+
+def _pool_key(res: FluidResource) -> str:
+    return res.share_group or res.name
+
+
 def _rates(active: list[Transfer], done_count: dict) -> dict[int, float]:
-    """Max-min fair allocation per resource (equal split, per-client cap)."""
+    """Max-min fair allocation per capacity pool (equal split, per-client
+    cap); resources with a common ``share_group`` form one pool."""
     by_res: dict[str, list[Transfer]] = {}
     for t in active:
-        by_res.setdefault(t.resource.name, []).append(t)
+        by_res.setdefault(_pool_key(t.resource), []).append(t)
     rates: dict[int, float] = {}
     for rname, ts in by_res.items():
         res = ts[0].resource
@@ -72,7 +102,7 @@ def _rates(active: list[Transfer], done_count: dict) -> dict[int, float]:
             cap /= res.throttle_factor
         share = cap / n
         for t in ts:
-            rates[id(t)] = min(res.per_client, share)
+            rates[id(t)] = min(t.resource.per_client, share)
     return rates
 
 
@@ -120,8 +150,8 @@ def simulate_stage(transfers: list[Transfer],
         for t in active:
             if remaining[id(t)] <= 1e-9:
                 node_done(t.node, t_now)
-                done_count[t.resource.name] = \
-                    done_count.get(t.resource.name, 0) + 1
+                key = _pool_key(t.resource)
+                done_count[key] = done_count.get(key, 0) + 1
             else:
                 still.append(t)
         active = still

@@ -99,6 +99,33 @@ class TestWorkload:
         assert large > small, (small, large)
         assert large > 1.3
 
+    def test_pipelined_overlap_beats_sequential(self):
+        """Warm pipelined startup: job_level is the max over per-node
+        dependency chains, strictly below the barrier-per-stage sum —
+        while the per-stage durations themselves are identical (only the
+        schedule changed, not the work)."""
+        for servers in (2, 8, 32):
+            seq = StartupWorkload(bootseer=True, seed=1,
+                                  pipeline=False).run(servers)
+            pipe = StartupWorkload(bootseer=True, seed=1).run(servers)
+            assert pipe["pipelined"] and not seq["pipelined"]
+            assert pipe["job_level"] < seq["job_level"], servers
+            assert pipe["stages"] == seq["stages"]
+            # the overlapped schedule can never beat its longest chain
+            longest = max(a["train_ready_s"]
+                          for a in pipe["critical_path"].values())
+            assert pipe["job_level"] == pytest.approx(longest)
+
+    def test_critical_path_attribution_shape(self):
+        for kw in ({"bootseer": True}, {"bootseer": False}):
+            r = StartupWorkload(seed=0, **kw).run(8)
+            cp = r["critical_path"]
+            assert set(cp) == {f"node{i:04d}" for i in range(8)}
+            for attr in cp.values():
+                assert attr["chain"]
+                assert attr["gated_by"] == attr["chain"][-1]
+                assert attr["train_ready_s"] > 0
+
     def test_bootseer_flattens_stragglers(self):
         """§5.4 Fig. 14: env-cache eliminates install stragglers."""
         import statistics

@@ -269,6 +269,61 @@ class TestTopology:
         assert swarm.rarest_first([b[0], b[1], b[2]]) == [b[2], b[1], b[0]]
 
 
+class _SlowPeer:
+    """Wraps a client's serve path with a fixed delay (congested uplink)."""
+
+    def __init__(self, inner, delay_s):
+        self._inner = inner
+        self._delay = delay_s
+        self.node_id = inner.node_id
+        self.client_id = inner.client_id
+
+    def get_cached_block(self, h):
+        time.sleep(self._delay)
+        return self._inner.get_cached_block(h)
+
+
+class TestLatencyAwareSelection:
+    def test_slow_peer_sheds_load_to_fast_one(self, image_env, tmp_path):
+        """Peer choice weights OBSERVED serve latency (EWMA), not just
+        bytes served: once a slow holder has been probed, same-rack
+        load balancing routes the remaining blocks to the fast holder
+        even though its byte count keeps growing."""
+        tmp, reg, man = image_env
+        swarm = Swarm(Topology(nodes_per_rack=8))
+        seed = LazyImageClient(man, reg, tmp_path / "l0", node_id="node0")
+        seed.read_file("lib.bin")           # all 11 lib blocks local
+        slow = _SlowPeer(LazyImageClient(man, reg, tmp_path / "l1",
+                                         node_id="node1"), 0.02)
+        fast = LazyImageClient(man, reg, tmp_path / "l2", node_id="node2")
+        for c in (slow, fast):
+            swarm.join(c)
+            swarm.announce(c, man.file_map()["lib.bin"].blocks)
+        # mirror the seed's blocks onto both holders' disks
+        for h in set(man.file_map()["lib.bin"].blocks):
+            data = seed.get_cached_block(h)
+            slow._inner._store(h, data)
+            fast._store(h, data)
+
+        req = LazyImageClient(man, reg, tmp_path / "l3", node_id="node3",
+                              peers=swarm)
+        req.read_file("lib.bin")
+        s_slow = swarm.stats[slow.client_id]
+        s_fast = swarm.stats[fast.client_id]
+        # the slow peer got probed at most a couple of times, then shed
+        assert s_slow["blocks_served"] <= 2
+        assert s_fast["blocks_served"] >= 9
+        # EWMA exposure: per peer and per link tier
+        assert s_slow["serve_latency_ewma_s"] >= 0.015
+        assert 0 < s_fast["serve_latency_ewma_s"] < \
+            s_slow["serve_latency_ewma_s"]
+        assert swarm.link_stats["intra_rack"]["serve_latency_ewma_s"] > 0
+
+    def test_latency_alpha_validated(self):
+        with pytest.raises(ValueError, match="latency_alpha"):
+            Swarm(latency_alpha=0.0)
+
+
 class TestStoreAccounting:
     def test_lost_race_not_counted(self, image_env, tmp_path):
         """bytes_fetched counts blocks actually written, not lost races."""
