@@ -1,0 +1,276 @@
+"""Storage-fabric benchmark: degraded-read cost and bounded-cache health.
+
+Two cell families, both on deterministic throttled I/O (sleeps release the
+GIL, so parallelism is real on 2-CPU runners):
+
+* **restore cells** (1-8 nodes, erasure placement k=8, m=2): walltime and
+  counted DFS bytes of a planned sharded restore, healthy vs with ONE
+  physical stripe file deleted.  The degraded restore must (a) produce
+  BYTE-IDENTICAL tensors (hash-verified against the healthy restore —
+  the whole point of parity), (b) stay within ``--max-ratio`` x the
+  healthy walltime (CI gate, default 2.0), and (c) show its
+  reconstruction traffic in the read-amplification figure
+  (degraded/healthy counted DFS bytes, expected ~1 + (k-1)/k for one
+  lost stripe of a full sweep).
+
+* **eviction cell** (node cache = 0.5 x working set): a swarm-attached
+  client cold-streams an image through a byte-bounded fabric NodeCache,
+  then replays a hot subset.  Must complete with evictions > 0, no
+  singleflight stampede (registry fetches <= distinct miss keys), and
+  ZERO stale swarm advertisements (every block the availability index
+  attributes to the client is actually on its disk).
+
+    PYTHONPATH=src python -m benchmarks.bench_fabric --json BENCH_fabric.json
+    # CI regression gate (exit 2 when degraded/healthy walltime > ratio):
+    PYTHONPATH=src python -m benchmarks.bench_fabric --max-ratio 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:  # script mode: put the repo root on sys.path
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import emit
+
+from repro.blockstore.image import build_image
+from repro.blockstore.lazy import LazyImageClient
+from repro.blockstore.registry import Registry
+from repro.blockstore.swarm import Swarm
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core.pipeline import DEFERRED
+from repro.dfs.hdfs import HdfsCluster, ThrottleModel
+from repro.fabric import NodeCache, Placement
+
+# B/s shared: low enough that throttled I/O dominates the walltime (the
+# degraded/healthy ratio then tracks the byte ratio ~1 + (k-1)/k instead
+# of being inflated toward the gate by fixed per-call Python overhead)
+DFS_BW = 24e6
+K, M = 8, 2            # erasure geometry under test
+CKPT_MB = 24
+
+
+def _build_ckpt(root: Path, rng, *, placement) -> tuple:
+    hdfs = HdfsCluster(root, num_groups=K + M, block_size=1 << 20,
+                       throttle=ThrottleModel(bandwidth=DFS_BW,
+                                              throttle_after=64,
+                                              timescale=1.0))
+    ck = Checkpointer(hdfs, striped=True, width=K, placement=placement,
+                      chunk=256 * 1024, stripe=1024 * 1024)
+    side = int(np.sqrt(CKPT_MB * (1 << 20) / 4 / 3))
+    params = {"w": rng.standard_normal((side, side)).astype(np.float32)}
+    opt = {"mu": {"w": rng.standard_normal((side, side)).astype(np.float32)},
+           "nu": {"w": rng.standard_normal((side, side)).astype(np.float32)}}
+    ck.save(100, params, opt)
+    return hdfs, ck, (params, opt)
+
+
+def _hash_trees(trees) -> str:
+    h = hashlib.sha256()
+    import jax
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            arr = np.asarray(leaf)
+            if arr.dtype == jax.numpy.bfloat16:
+                arr = arr.view(np.uint16)
+            h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _restore_sweep(ck, n: int) -> float:
+    """n concurrent per-rank planned restores (rows plan, both waves)."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.core.bootseer import planned_restore_bytes
+
+    def one(rank):
+        return planned_restore_bytes(ck, 100, rank=rank, nodes=n,
+                                     resume_plan="rows")
+
+    t0 = time.perf_counter()
+    if n == 1:
+        one(0)
+    else:
+        with ThreadPoolExecutor(n) as ex:
+            list(ex.map(one, range(n)))
+    return time.perf_counter() - t0
+
+
+def _restore_cells(nodes, repeats: int) -> list:
+    cells = []
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        # same seed for both worlds: the degraded copy holds EXACTLY the
+        # healthy tensors, so its restore hash is comparable
+        hdfs_h, ck_h, trees = _build_ckpt(root / "healthy",
+                                          np.random.default_rng(42),
+                                          placement=Placement.erasure(M))
+        hdfs_d, ck_d, _ = _build_ckpt(root / "degraded",
+                                      np.random.default_rng(42),
+                                      placement=Placement.erasure(M))
+        # lose one physical stripe file of the degraded copy
+        files = hdfs_d.attrs(ck_d.data_path(100))["striped"]["files"]
+        group, name = files[3]
+        (hdfs_d.root / f"group{group:02d}" / name).unlink()
+
+        # byte-identity: the degraded restore must reconstruct EXACTLY the
+        # healthy tensors (hash-compared against the saved state)
+        healthy_hash = _hash_trees(ck_h.restore_planned(
+            100, trees[0], trees[1]))
+        ref_hash = _hash_trees(trees)
+        degraded_hash = _hash_trees(ck_d.restore_planned(
+            100, trees[0], trees[1]))
+        if healthy_hash != ref_hash:
+            raise SystemExit("healthy restore does not match saved state")
+        if degraded_hash != ref_hash:
+            raise SystemExit("DEGRADED RESTORE DIVERGED: parity "
+                             "reconstruction returned wrong bytes")
+        if hdfs_d.fabric_stats["degraded_reads"] == 0:
+            raise SystemExit("degraded restore hit no reconstruction path "
+                             "(stripe delete ineffective?)")
+
+        for n in nodes:
+            h_s, d_s, amp = [], [], 0.0
+            for _rep in range(max(repeats, 1)):
+                r0 = hdfs_h.read_bytes
+                h_s.append(_restore_sweep(ck_h, n))
+                healthy_bytes = hdfs_h.read_bytes - r0
+                r0 = hdfs_d.read_bytes
+                d_s.append(_restore_sweep(ck_d, n))
+                degraded_bytes = hdfs_d.read_bytes - r0
+                amp = max(amp, degraded_bytes / max(healthy_bytes, 1))
+            cells.append({
+                "n": n, "healthy_s": round(min(h_s), 4),
+                "degraded_s": round(min(d_s), 4),
+                "ratio": round(min(d_s) / max(min(h_s), 1e-9), 4),
+                "read_amplification": round(amp, 4),
+                "identical_restore": True,
+                "restore_hash": degraded_hash[:16],
+            })
+    return cells
+
+
+def _eviction_cell(rng) -> dict:
+    """Cache = 0.5 x working set: stream + replay under pressure."""
+    n_blocks, bs = 48, 64 * 1024
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        src = root / "src"
+        src.mkdir()
+        for i in range(n_blocks):
+            (src / f"f{i:03d}.bin").write_bytes(
+                rng.integers(0, 256, bs, dtype=np.uint8).tobytes())
+        reg = Registry(root / "reg")
+        manifest = build_image(src, reg, "img", block_size=bs)
+        unique = len(manifest.unique_blocks)
+        working_set = sum(len(reg.get_block(h))
+                          for h in manifest.unique_blocks)
+
+        fetch_counts: dict = {}
+        orig_get = reg.get_block
+
+        def counting_get(h):
+            fetch_counts[h] = fetch_counts.get(h, 0) + 1
+            return orig_get(h)
+
+        reg.get_block = counting_get
+        swarm = Swarm()
+        cache = NodeCache(root / "cache",
+                          capacity_bytes=int(working_set * 0.5))
+        client = LazyImageClient(manifest, reg, cache.root,
+                                 node_id="node000", peers=swarm,
+                                 cache=cache)
+        # cold stream the whole image (DEFERRED: no pins), then replay a
+        # "hot" third of it — everything under 0.5x capacity
+        from concurrent.futures import ThreadPoolExecutor
+        blocks = list(manifest.unique_blocks)
+        with ThreadPoolExecutor(8) as ex:
+            list(ex.map(lambda h: client.ensure_block(h, priority=DEFERRED),
+                        blocks))
+            hot = blocks[:unique // 3]
+            list(ex.map(lambda h: client.ensure_block(h, priority=DEFERRED),
+                        hot * 2))
+        # fabric invariants under pressure:
+        evictions = cache.stats["evictions"]
+        stampede = any(
+            fetch_counts[h] > 1 + cache.stats["evictions"] for h in blocks)
+        stale_ads = [h for h in blocks
+                     if swarm.holder_count(h) > 0 and not cache.has(h)]
+        over = cache.bytes_used > int(working_set * 0.5)
+        return {
+            "unique_blocks": unique,
+            "working_set_bytes": working_set,
+            "capacity_bytes": int(working_set * 0.5),
+            "evictions": evictions,
+            "registry_fetches": sum(fetch_counts.values()),
+            "stale_swarm_ads": len(stale_ads),
+            "stampede": stampede,
+            "over_capacity": over,
+        }
+
+
+def run(nodes=(1, 2, 4, 8), json_path=None, max_ratio=None,
+        repeats: int = 2):
+    cells = _restore_cells(nodes, repeats)
+    evict = _eviction_cell(np.random.default_rng(1))
+    rows = []
+    worst = 0.0
+    for c in cells:
+        rows.append((f"fabric.degraded_ratio.n{c['n']}", c["ratio"],
+                     f"healthy {c['healthy_s']:.2f}s -> degraded "
+                     f"{c['degraded_s']:.2f}s; read amp "
+                     f"x{c['read_amplification']:.2f}; identical=True"))
+        worst = max(worst, c["ratio"])
+    rows.append(("fabric.evictions", evict["evictions"],
+                 f"cache 0.5x working set; {evict['registry_fetches']} "
+                 f"registry fetches over {evict['unique_blocks']} blocks"))
+    rows.append(("fabric.stale_swarm_ads", evict["stale_swarm_ads"],
+                 "evicted blocks still advertised (MUST be 0)"))
+    emit(rows, f"Storage fabric: degraded restores (k={K}, m={M}) "
+               f"+ eviction pressure (nodes {list(nodes)})")
+    report = {"k": K, "m": M, "nodes": cells, "eviction": evict,
+              "max_ratio_gate": max_ratio, "repeats": repeats}
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+    if evict["evictions"] == 0:
+        print("REGRESSION: bounded cache produced no evictions under "
+              "2x-capacity traffic")
+        raise SystemExit(2)
+    if evict["stale_swarm_ads"] or evict["stampede"] or evict["over_capacity"]:
+        print(f"REGRESSION: fabric invariants violated: "
+              f"stale_ads={evict['stale_swarm_ads']} "
+              f"stampede={evict['stampede']} "
+              f"over_capacity={evict['over_capacity']}")
+        raise SystemExit(2)
+    if max_ratio is not None and worst > max_ratio:
+        print(f"REGRESSION: degraded/healthy restore walltime ratio "
+              f"{worst:.3f} > gate {max_ratio}")
+        raise SystemExit(2)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--json", default="")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail (exit 2) if degraded/healthy restore "
+                         "walltime exceeds this ratio")
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args()
+    run(nodes=tuple(args.nodes), json_path=args.json or None,
+        max_ratio=args.max_ratio, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -96,17 +96,21 @@ def _node_state(workdir: Path) -> dict:
 
 
 def _one_mode(root: Path, reg, hdfs, ck, hot_root: Path, n: int,
-              pipeline: bool, rep: int = 0):
+              pipeline: bool, rep: int = 0, fabric: bool = False):
     """One warm startup on FRESH nodes (cold node-local caches, warm
     infrastructure: hot record, env cache and checkpoint already on the
-    shared registry/DFS)."""
-    tag = "pipe" if pipeline else "seq"
+    shared registry/DFS).  ``fabric=True`` runs the same startup with the
+    storage-fabric knobs engaged (byte-bounded hot-score node caches) —
+    the healthy path must stay byte-identical to the default run."""
+    tag = "fab" if fabric else ("pipe" if pipeline else "seq")
     workdir = root / f"w_{tag}_{n}_r{rep}"
     egress0 = reg.stats["bytes_served"]
     read0 = hdfs.read_bytes
+    fabric_kw = {"cache_bytes": 1 << 30, "cache_policy": "hot"} \
+        if fabric else {}
     with BootseerRuntime(registry=reg, hdfs=hdfs, workdir=workdir,
                          optimize=True, pipeline=pipeline,
-                         hot_root=hot_root) as rt:
+                         hot_root=hot_root, **fabric_kw) as rt:
         res = rt.run_startup(_spec(n), checkpointer=ck)
         rt.drain_deferred()   # cold remainder + opt wave, off the clock
     return {
@@ -116,6 +120,8 @@ def _one_mode(root: Path, reg, hdfs, ck, hot_root: Path, n: int,
         "gating": res.notes["gating_counts"],
         "state": _node_state(workdir),
         "prefetch_used": res.notes["prefetch_used"],
+        "degraded_reads": res.notes["degraded_reads"],
+        "evictions": res.notes["evictions"],
     }
 
 
@@ -201,6 +207,39 @@ def run(nodes=(1, 2, 4, 8, 16, 32), json_path=None, max_ratio=None,
                          f"egress x{egress_ratio:.2f}"))
             if max_ratio is not None and n >= 8:
                 worst_gated = max(worst_gated, ratio)
+
+        # fabric guard cell: the SAME warm startup with the storage-fabric
+        # knobs engaged (byte-bounded hot-score node caches) must be
+        # behaviour-preserving when nothing fails — byte-identical on-disk
+        # state and the same registry-egress ratio as the pre-fabric run.
+        # Compared against the LAST loop cell's pipe run (`pipe` holds it),
+        # so the fabric cell runs at that same n
+        n = nodes[-1]
+        fab = _one_mode(root, reg, hdfs, ck, hot_root, n, True,
+                        rep=0, fabric=True)
+        pipe_ratio = pipe["registry_egress"] / unique_bytes
+        fab_ratio = fab["registry_egress"] / unique_bytes
+        if fab["state"] != pipe["state"]:
+            raise SystemExit(
+                f"FABRIC MISMATCH at n={n}: fabric-backed healthy startup "
+                "must produce byte-identical on-disk state")
+        if abs(fab_ratio - pipe_ratio) > 0.02:
+            raise SystemExit(
+                f"FABRIC MISMATCH at n={n}: registry egress ratio changed "
+                f"(x{pipe_ratio:.3f} -> x{fab_ratio:.3f})")
+        if fab["degraded_reads"] != 0:
+            raise SystemExit(
+                f"FABRIC MISMATCH at n={n}: healthy path reported "
+                f"{fab['degraded_reads']} degraded reads")
+        report["fabric_cell"] = {
+            "n": n, "identical_files": True,
+            "registry_egress_ratio": round(fab_ratio, 3),
+            "evictions": fab["evictions"],
+            "degraded_reads": fab["degraded_reads"],
+        }
+        rows.append((f"pipeline.fabric_identical.n{n}", 1,
+                     f"fabric-backed warm startup byte-identical; egress "
+                     f"x{fab_ratio:.2f} (default x{pipe_ratio:.2f})"))
     emit(rows, f"Pipelined vs sequential warm startup (nodes {list(nodes)})")
     if json_path:
         Path(json_path).write_text(json.dumps(report, indent=2))

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_resume",
     "benchmarks.bench_swarm",
     "benchmarks.bench_pipeline",
+    "benchmarks.bench_fabric",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
     "benchmarks.beyond_paper",

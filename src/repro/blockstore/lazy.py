@@ -7,6 +7,23 @@ PeerGroup is attached) or the registry.  Every first access is recorded —
 record-and-prefetch service (repro.blockstore.prefetch) persists per image
 digest.
 
+The block cache is a storage-fabric :class:`~repro.fabric.cache.NodeCache`
+(content-addressed, optionally byte-bounded): pass one in to share it
+across clients/runs and bound it; by default each client builds an
+unbounded cache over ``cache_dir`` (the pre-fabric behaviour).  The fabric
+interplay rules live here:
+
+* **eviction withdraws availability** — when the cache evicts a block,
+  the client's eviction listener removes it from the swarm availability
+  index, so no peer is routed to bytes that left this disk;
+* **startup accesses pin** — every non-DEFERRED ``ensure_block`` pins the
+  block for this client's job, so a concurrent job's cold stream cannot
+  evict the working set a startup is replaying (``release_pins`` drops
+  them once the startup is over);
+* **eviction races are misses** — a block can vanish between ``has_block``
+  and the read; every read path treats that as an ordinary miss and
+  refetches instead of erroring.
+
 A node may run several clients at once (concurrent jobs, multiple images):
 each client carries a swarm-unique ``client_id`` (node + image digest by
 default) so per-peer accounting and membership never collide.
@@ -14,7 +31,6 @@ default) so per-peer accounting and membership never collide.
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 from pathlib import Path
@@ -22,6 +38,7 @@ from typing import Optional
 
 from repro.blockstore.image import ImageManifest
 from repro.blockstore.registry import Registry
+from repro.fabric.cache import NodeCache
 
 
 class LazyImageClient:
@@ -29,11 +46,12 @@ class LazyImageClient:
                  cache_dir: str | Path, *, node_id: str = "node0",
                  peers: Optional["Swarm"] = None,
                  client_id: Optional[str] = None,
-                 peer_replace: bool = False, sched=None):
+                 peer_replace: bool = False, sched=None,
+                 cache: Optional[NodeCache] = None):
         self.manifest = manifest
         self.registry = registry
-        self.cache_dir = Path(cache_dir)
-        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        self.cache = cache if cache is not None else NodeCache(cache_dir)
+        self.cache_dir = self.cache.root
         self.node_id = node_id
         self.client_id = client_id or f"{node_id}:{manifest.digest[:8]}"
         self.peers = peers
@@ -49,26 +67,38 @@ class LazyImageClient:
         self.stats = {"hits": 0, "misses": 0, "peer_fetches": 0,
                       "registry_fetches": 0, "bytes_fetched": 0}
         if peers is not None:
+            # an evicted block must leave the availability index the
+            # moment it leaves disk; keyed by client_id so a warm
+            # restart's client simply replaces its predecessor's listener
+            swarm, cid = peers, self.client_id
+            self.cache.set_evict_listener(
+                cid, lambda h: swarm.withdraw(h, cid))
             peers.join(self, replace=peer_replace)
 
     # ----- block cache -----
 
     def _cache_path(self, h: str) -> Path:
-        return self.cache_dir / h
+        return self.cache.path(h)
 
     def has_block(self, h: str) -> bool:
-        return self._cache_path(h).exists()
+        return self.cache.has(h)
 
     def get_cached_block(self, h: str) -> bytes:
-        return self._cache_path(h).read_bytes()
+        return self.cache.read(h)
 
     def cached_hashes(self) -> list[str]:
         """Block hashes already on local disk (warm-cache announcement)."""
-        return [p.name for p in self.cache_dir.iterdir()
-                if len(p.name) == 64
-                and all(c in "0123456789abcdef" for c in p.name)]
+        return [k for k in self.cache.keys()
+                if len(k) == 64
+                and all(c in "0123456789abcdef" for c in k)]
 
-    def _fetch_block(self, h: str, priority: int = 0) -> bytes:
+    def release_pins(self):
+        """Drop this client's working-set pins (startup finished): its
+        blocks become ordinary eviction candidates again."""
+        self.cache.unpin_job(self.client_id)
+
+    def _fetch_block(self, h: str, priority: int = 0,
+                     pin: bool = False) -> bytes:
         """Peer-first fetch with registry fallback.  With a scheduler
         attached, a registry fetch holds one "registry" token for the
         duration of that single block — the cooperative-preemption
@@ -80,24 +110,33 @@ class LazyImageClient:
         bounded inside the swarm (per-holder ``serve_slots``); the
         scheduler's "peer" resource keeps the per-priority byte
         accounting role only."""
+        job = self.client_id if pin else None
         if self.peers is not None:
             data = self.peers.fetch(h, requester=self)
             if data is not None:
                 self.stats["peer_fetches"] += 1
                 if self.sched is not None:
                     self.sched.account("peer", priority, len(data))
-                self._store(h, data)
+                self._store(h, data, job=job)
                 # announce: this client is now a holder too, so the
                 # dissemination tree fans out instead of pinning the seed
                 self.peers.publish(h, self)
                 return data
-            if self.has_block(h):
-                # another thread of THIS client was the fetcher-of-record
-                # while we were parked: the block is already on local disk
-                # (publish announces it and clears any marker we re-armed)
-                self.peers.publish(h, self)
+            try:
+                # another thread of THIS client may have been the
+                # fetcher-of-record while we were parked: the block is
+                # already on local disk (publish announces it and clears
+                # any marker we re-armed).  An eviction between the check
+                # and the read falls through to the registry like any miss.
+                data = self.cache.read(h)
+                if self.peers is not None:
+                    self.peers.publish(h, self)
                 self.stats["hits"] += 1
-                return self.get_cached_block(h)
+                if job is not None:
+                    self.cache.pin(job, h)
+                return data
+            except FileNotFoundError:
+                pass
         try:
             if self.sched is not None:
                 with self.sched.slot("registry", priority=priority):
@@ -112,38 +151,36 @@ class LazyImageClient:
                 self.peers.abandon(h, self)
             raise
         self.stats["registry_fetches"] += 1
-        self._store(h, data)
+        self._store(h, data, job=job)
         if self.peers is not None:
             self.peers.publish(h, self)
         return data
 
-    def _store(self, h: str, data: bytes) -> bool:
+    def _store(self, h: str, data: bytes, job: Optional[str] = None) -> bool:
         """Write ``data`` to the local cache; returns whether this call
         actually stored it.  Bytes are only counted when written — a lost
         race with a concurrent fetcher is not a fetch."""
-        p = self._cache_path(h)
-        if p.exists():
-            return False
-        tmp = p.with_suffix(f".tmp{threading.get_ident():x}")
-        tmp.write_bytes(data)
-        try:
-            os.link(tmp, p)       # atomic publish; loser keeps p intact
-        except FileExistsError:
-            return False
-        finally:
-            tmp.unlink(missing_ok=True)
-        self.stats["bytes_fetched"] += len(data)
-        return True
+        stored = self.cache.put(h, data, job=job)
+        if stored:
+            self.stats["bytes_fetched"] += len(data)
+        return stored
 
     def ensure_block(self, h: str, *, record: bool = False,
                      file_path: str = "", block_idx: int = -1,
                      priority: int = 0) -> bytes:
-        if self.has_block(h):
+        from repro.core.pipeline import DEFERRED
+
+        # startup-critical accesses pin the block for this job; DEFERRED
+        # (cold-stream) traffic never pins — bounded caches may rotate it
+        pin = priority != DEFERRED
+        try:
+            data = self.cache.read(h)
             self.stats["hits"] += 1
-            data = self.get_cached_block(h)
-        else:
+            if pin:
+                self.cache.pin(self.client_id, h)
+        except FileNotFoundError:
             self.stats["misses"] += 1
-            data = self._fetch_block(h, priority)
+            data = self._fetch_block(h, priority, pin=pin)
         if record:
             with self._lock:
                 self._trace.append({

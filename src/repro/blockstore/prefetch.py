@@ -104,6 +104,19 @@ class HotBlockService:
         return {h: e["score"]
                 for h, e in self._load(digest)["blocks"].items()}
 
+    def score_index(self) -> dict[str, float]:
+        """Merged {block hash: hot score} across EVERY recorded image —
+        the heat map a hot-score-aware eviction policy
+        (repro.fabric.cache.HotScorePolicy) ranks node-cache victims by.
+        Blocks hot for any image keep the max of their per-image scores;
+        blocks no record mentions default to 0.0 (evicted first)."""
+        out: dict[str, float] = {}
+        for p in self.root.glob("*.trace.json"):
+            digest = p.name[:-len(".trace.json")]
+            for h, e in self._load(digest)["blocks"].items():
+                out[h] = max(out.get(h, 0.0), e["score"])
+        return out
+
 
 def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
                    hot_threads: int = 8, cold_threads: int = 8,

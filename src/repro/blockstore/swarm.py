@@ -181,12 +181,28 @@ class Swarm:
         # holder-index entries are pruned lazily on the next failed pick
 
     def announce(self, client, hashes: Iterable[str]):
-        """Add ``client`` as a holder of ``hashes`` (warm-cache seeding)."""
+        """Add ``client`` as a holder of ``hashes`` (warm-cache seeding).
+
+        Announcements are advisory: a block may vanish from the holder's
+        disk afterwards (cache eviction, crash mid-publish) and the serve
+        path tolerates that — a failed serve prunes the stale entry and
+        the fetch falls through to the remaining holders, the
+        singleflight marker, or the registry.  Holders with a bounded
+        :class:`~repro.fabric.cache.NodeCache` should ALSO withdraw
+        eagerly via :meth:`withdraw` (the cache's eviction listener) so
+        stale routing never happens in the first place."""
         cid = _client_id(client)
         for h in hashes:
             sh = self._shard(h)
             with sh.lock:
                 sh.holders.setdefault(h, set()).add(cid)
+
+    def withdraw(self, h: str, client):
+        """Remove ``client`` as a holder of ``h`` — the eager inverse of
+        :meth:`announce`, called when a block leaves a node's disk (cache
+        eviction).  Accepts a client object or a bare client id."""
+        cid = client if isinstance(client, str) else _client_id(client)
+        self._drop_holder(h, cid)
 
     # ----- index ------------------------------------------------------
 

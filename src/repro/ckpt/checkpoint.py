@@ -54,6 +54,10 @@ class _PlainReader:
     def __init__(self, hdfs: HdfsCluster, path: str):
         self._hdfs = hdfs
         self._path = path
+        # signature parity with StripedReader: no placement, no degraded
+        # reads — counters stay zero
+        self.stats = {"degraded_reads": 0, "reconstructed_bytes": 0,
+                      "reconstruction_read_bytes": 0, "corrupt_chunks": 0}
 
     def pread(self, off: int, ln: int) -> bytes:
         return self._hdfs.pread(self._path, off, ln)
@@ -64,13 +68,29 @@ class _PlainReader:
 
 
 class Checkpointer:
+    """``placement`` selects the storage-fabric durability strategy for
+    saved checkpoints (see repro.fabric.placement): ``"striped"``
+    (default, the pre-fabric layout), ``"replicated"``, or
+    ``Placement.erasure(m)`` — with erasure, a restore that hits a
+    missing/truncated stripe file reconstructs it from parity
+    transparently instead of raising ``StripeMissingError``."""
+
     def __init__(self, hdfs: HdfsCluster, base: str = "/ckpt", *,
-                 striped: bool = True, width: int = 8, threads: int = 8):
+                 striped: bool = True, width: int = 8, threads: int = 8,
+                 placement=None, chunk: Optional[int] = None,
+                 stripe: Optional[int] = None):
+        from repro.dfs.striped import CHUNK, STRIPE
         self.hdfs = hdfs
         self.base = base.rstrip("/")
         self.striped = striped
         self.width = width
         self.threads = threads
+        self.placement = placement
+        # chunk/stripe granularity of the striped layout — smaller values
+        # spread small checkpoints across all ``width`` files (readers
+        # pick the geometry up from the file attrs, no knob needed there)
+        self.chunk = chunk or CHUNK
+        self.stripe = stripe or STRIPE
 
     # ----- paths -----
 
@@ -108,7 +128,9 @@ class Checkpointer:
                 arrays.append(arr)
         if self.striped:
             with StripedWriter(self.hdfs, self.data_path(step),
-                               width=self.width, threads=self.threads) as w:
+                               width=self.width, threads=self.threads,
+                               placement=self.placement, chunk=self.chunk,
+                               stripe=self.stripe) as w:
                 for arr in arrays:
                     w.write(arr.tobytes())
         else:

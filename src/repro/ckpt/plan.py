@@ -323,7 +323,13 @@ def read_plan(reader, plan: RestorePlan, *,
     instead of N x checkpoint_size.  Batching also bounds how long one
     scheduler token is held: with a ``priority``-aware reader, a DEFERRED
     opt-state wave yields to CRITICAL reads at batch granularity.
-    Returns the number of bytes read."""
+    Returns the number of bytes read — including, for a fabric reader
+    that had to reconstruct a lost stripe from parity mid-plan, the extra
+    source bytes of the degraded read (``reconstruction_read_bytes``
+    delta), so callers report the I/O that actually hit the DFS rather
+    than the healthy-path plan size."""
+    stats = getattr(reader, "stats", None)
+    recon0 = stats.get("reconstruction_read_bytes", 0) if stats else 0
     ops = plan.reads
     i = 0
     while i < len(ops):
@@ -337,4 +343,6 @@ def read_plan(reader, plan: RestorePlan, *,
                              for op in ops[i:j]],
                             priority=priority)
         i = j
-    return plan.planned_bytes
+    extra = (stats.get("reconstruction_read_bytes", 0) - recon0) \
+        if stats else 0
+    return plan.planned_bytes + extra

@@ -45,6 +45,7 @@ from repro.core.stages import Stage, StartupTask
 from repro.dfs.fuse import HdfsFuseMount
 from repro.dfs.hdfs import HdfsCluster
 from repro.envcache.snapshot import EnvCache, job_cache_key, snapshot_dir
+from repro.fabric.cache import NodeCache
 
 
 @dataclass
@@ -97,7 +98,10 @@ class BootseerRuntime:
                  stripe_width: int = 8, nodes_per_rack: int = 8,
                  pipeline: bool = True,
                  hot_root: Optional[str | Path] = None,
-                 io_tokens: Optional[dict] = None):
+                 io_tokens: Optional[dict] = None,
+                 cache_bytes: Optional[int] = None,
+                 cache_policy: str = "lru",
+                 env_cache_bytes: Optional[int] = None):
         self.registry = registry
         self.hdfs = hdfs
         self.mount = HdfsFuseMount(hdfs)
@@ -119,11 +123,21 @@ class BootseerRuntime:
         # shared storage (hot_root) so fresh nodes see existing records
         self.hot_service = HotBlockService(
             Path(hot_root) if hot_root else self.workdir / "_hotblocks")
+        # storage-fabric node caches — one per (job, node), shared across
+        # runs so warm restarts inherit the previous run's blocks.
+        # ``cache_bytes`` bounds each; ``cache_policy`` picks the eviction
+        # order ("lru", or "hot" — hot-block-score-aware, wired to the
+        # HotBlockService so the blocks startups actually replay outlive
+        # cold-streamed filler)
+        self.cache_bytes = cache_bytes
+        self.cache_policy = cache_policy
+        self._node_caches: dict[tuple, NodeCache] = {}
+        self._hot_scores: dict = {"t": float("-inf"), "idx": {}}
         # node-local archive cache: N worker threads restoring the same key
         # cost ONE DFS fetch (singleflight), not N through the shared throttle
         self.env_cache = EnvCache(
             self.mount, local_cache=self.workdir / "_envcache_local",
-            sched=self.io_sched)
+            local_cache_bytes=env_cache_bytes, sched=self.io_sched)
         self.hot_threads = hot_threads
         self.ckpt_threads = ckpt_threads
         self.stripe_width = stripe_width
@@ -189,6 +203,47 @@ class BootseerRuntime:
         self.close()
 
     # ------------------------------------------------------------------
+    # storage-fabric node caches
+    # ------------------------------------------------------------------
+
+    def _hot_score(self, key: str) -> float:
+        """Hot-block score for the eviction policy; the merged score
+        index is re-read from the record store at most every few seconds
+        (victim scans must not re-parse trace files per key)."""
+        now = time.monotonic()
+        if now - self._hot_scores["t"] > 5.0:
+            self._hot_scores = {"t": now,
+                                "idx": self.hot_service.score_index()}
+        return self._hot_scores["idx"].get(key, 0.0)
+
+    def _node_cache(self, job_id: str, rank: int) -> NodeCache:
+        """The per-(job, node) block cache: content-addressed and immutable
+        blocks, so it survives job restarts (warm restarts re-read, never
+        re-fetch) — now byte-bounded with pluggable eviction."""
+        cache = self._node_caches.get((job_id, rank))
+        if cache is None:
+            cache = NodeCache(
+                self.workdir / "_blockcache" / job_id / f"n{rank}",
+                capacity_bytes=self.cache_bytes,
+                policy=self.cache_policy,
+                score_fn=self._hot_score)
+            self._node_caches[(job_id, rank)] = cache
+        return cache
+
+    def _fabric_counters(self) -> dict:
+        """Cumulative fabric counters (runtime lifetime): per-run figures
+        in ``StartupResult.notes`` are deltas against the run-start
+        snapshot."""
+        caches = list(self._node_caches.values())
+        if self.env_cache._local is not None:
+            caches.append(self.env_cache._local)
+        out = {"evictions": sum(c.stats["evictions"] for c in caches),
+               "evicted_bytes": sum(c.stats["evicted_bytes"]
+                                    for c in caches)}
+        out.update(self.hdfs.fabric_stats)
+        return out
+
+    # ------------------------------------------------------------------
     # the startup task DAG (shared by run_startup and run_hot_update)
     # ------------------------------------------------------------------
 
@@ -213,19 +268,20 @@ class BootseerRuntime:
         if include_image:
             def img_prefetch(deps):
                 node_dir.mkdir(parents=True, exist_ok=True)
-                # the block cache is per JOB+NODE, not per run: image
-                # blocks are content-addressed and immutable, so a node's
-                # local store survives job restarts (warm restarts
-                # re-read, never re-fetch)
-                blocks_dir = (self.workdir / "_blockcache" / spec.job_id
-                              / f"n{rank}")
+                # the block cache is the fabric NodeCache per JOB+NODE,
+                # not per run: image blocks are content-addressed and
+                # immutable, so a node's local store survives job restarts
+                # (warm restarts re-read, never re-fetch); under a byte
+                # bound the client pins its startup working set and
+                # withdraws evicted blocks from the swarm index
+                cache = self._node_cache(spec.job_id, rank)
                 client = LazyImageClient(
-                    manifest, self.registry, blocks_dir,
+                    manifest, self.registry, cache.root,
                     node_id=f"node{rank:03d}",
                     peers=self.swarm if self.optimize else None,
                     client_id=(f"{spec.job_id}/n{rank}:"
                                f"{manifest.digest[:8]}"),
-                    peer_replace=True, sched=self.io_sched)
+                    peer_replace=True, sched=self.io_sched, cache=cache)
                 stream_cold = None
                 if use_prefetch:
                     _, stream_cold = prefetch_image(
@@ -357,6 +413,7 @@ class BootseerRuntime:
                              include_image=include_image)
             for rank in range(n)]
 
+        fab0 = self._fabric_counters()
         t_zero = time.perf_counter()
 
         def clock() -> float:
@@ -373,9 +430,14 @@ class BootseerRuntime:
         for log in loggers:
             log.begin(Stage.TRAINING, ts=total)
 
-        # startup done: deferred DAG tasks (cold image remainder,
-        # optimizer-state restore waves) stream while training runs
+        # startup done: the working-set pins drop (the restored blocks are
+        # ordinary eviction candidates again) and deferred DAG tasks (cold
+        # image remainder, optimizer-state restore waves) stream while
+        # training runs
         for res in results:
+            prefetch_val = res.values.get(StartupTask.IMAGE_HOT_PREFETCH)
+            if isinstance(prefetch_val, dict) and "client" in prefetch_val:
+                prefetch_val["client"].release_pins()
             for _name, thunk in res.deferred:
                 self._submit_deferred(thunk)
 
@@ -388,10 +450,21 @@ class BootseerRuntime:
             self.analysis.ingest_log(log.lines())
         crit = {f"node{i:03d}": attribution(res)
                 for i, res in enumerate(results)}
+        fab1 = self._fabric_counters()
         notes = {"optimized": self.optimize, "pipelined": pipelined,
                  "prefetch_used": use_prefetch,
                  "critical_path": crit,
-                 "gating_counts": gating_counts(crit)}
+                 "gating_counts": gating_counts(crit),
+                 # storage-fabric health of THIS run: parity
+                 # reconstructions that saved the restore, and cache
+                 # evictions under the byte bound
+                 "degraded_reads": fab1["degraded_reads"]
+                 - fab0["degraded_reads"],
+                 "reconstructed_bytes": fab1["reconstructed_bytes"]
+                 - fab0["reconstructed_bytes"],
+                 "corrupt_chunks": fab1["corrupt_chunks"]
+                 - fab0["corrupt_chunks"],
+                 "evictions": fab1["evictions"] - fab0["evictions"]}
         if self.io_sched is not None:
             notes["io_sched"] = self.io_sched.snapshot()
         if not include_image:

@@ -99,10 +99,13 @@ class HdfsFuseMount:
         return self.hdfs.listdir(self._full(path) if path else self.prefix)
 
     def write(self, path: str, data: bytes, striped: bool = False,
-              width: int = 8):
+              width: int = 8, placement=None):
+        """``placement``: optional repro.fabric.placement.Placement (or
+        kind string) for striped writes — replicated/erasure durability."""
         full = self._full(path)
         if striped:
             from repro.dfs.striped import write_striped
-            write_striped(self.hdfs, full, data, width=width)
+            write_striped(self.hdfs, full, data, width=width,
+                          placement=placement)
         else:
             self.hdfs.write(full, data)

@@ -106,6 +106,12 @@ class HdfsCluster:
         # tests assert on these counters instead of wall clock.
         self.read_bytes = 0
         self.write_bytes = 0
+        # storage-fabric degraded-mode counters (see repro.dfs.striped):
+        # aggregated cluster-wide so the runtime can report per-run deltas
+        # without holding every short-lived reader
+        self.fabric_stats = {"degraded_reads": 0, "reconstructed_bytes": 0,
+                             "reconstruction_read_bytes": 0,
+                             "corrupt_chunks": 0}
         for g in range(num_groups):
             (self.root / f"group{g:02d}").mkdir(parents=True, exist_ok=True)
         self._meta_path = self.root / "namenode.json"
@@ -155,6 +161,11 @@ class HdfsCluster:
     def account_write(self, nbytes: int):
         with self._lock:
             self.write_bytes += int(nbytes)
+
+    def account_fabric(self, **counters: int):
+        with self._lock:
+            for key, n in counters.items():
+                self.fabric_stats[key] = self.fabric_stats.get(key, 0) + n
 
     def reset_counters(self):
         with self._lock:

@@ -18,9 +18,14 @@ fresh install rather than merely match it:
   ``width``-way parallel ``pread`` (large windows, not one whole-buffer
   ``read()``);
 * with a ``local_cache`` directory configured, the blob is fetched from the
-  DFS **once per node** and memoized on local disk — N concurrent restores
-  (one per worker thread) share a single DFS fetch instead of hammering the
-  shared throttle N times (singleflight per key);
+  DFS **once per node** and memoized in a storage-fabric
+  :class:`~repro.fabric.cache.NodeCache` — N concurrent restores (one per
+  worker thread) share a single DFS fetch instead of hammering the shared
+  throttle N times (the cache's singleflight admission), and
+  ``local_cache_bytes`` bounds the node's archive footprint (LRU).
+  Entries are **content-addressed** (job key + archive digest), so a
+  re-snapshot under the same job key can never be served a stale node-local
+  archive — the new digest simply never matches the old entry;
 * decompression is streamed into the tar reader (no second whole-archive
   buffer);
 * extraction replicates the stdlib ``data`` filter's safety checks manually
@@ -41,6 +46,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import BinaryIO, Optional
+
+from repro.fabric.cache import NodeCache
 
 try:
     import zstandard as zstd
@@ -186,30 +193,43 @@ class EnvCache:
     """Create/restore environment caches in the DFS (via HDFS-FUSE mount).
 
     ``local_cache``: optional node-local directory memoizing fetched
-    archives, so any number of concurrent restores on this node cost one
-    DFS fetch per key.  ``extract_threads`` sizes the restore-side file
-    writer pool.
+    archives in a storage-fabric :class:`NodeCache`, so any number of
+    concurrent restores on this node cost one DFS fetch per key;
+    ``local_cache_bytes`` bounds it (LRU eviction; ``None`` = unbounded).
+    A pre-built :class:`NodeCache` may be passed directly as
+    ``local_cache`` to share one fabric cache across consumers.
+    ``extract_threads`` sizes the restore-side file writer pool.
+    ``placement`` selects the DFS durability strategy for the packed
+    archive (striped / replicated / erasure — see repro.fabric.placement).
     """
 
     def __init__(self, mount, base: str = "/envcache", *,
-                 local_cache: Optional[str | Path] = None,
+                 local_cache: Optional[str | Path | NodeCache] = None,
+                 local_cache_bytes: Optional[int] = None,
                  extract_threads: int = 4,
-                 fetch_window: int = FETCH_WINDOW, sched=None):
+                 fetch_window: int = FETCH_WINDOW, sched=None,
+                 placement=None):
         self.mount = mount  # HdfsFuseMount
         self.base = base.rstrip("/")
         self.extract_threads = max(1, extract_threads)
         self.fetch_window = fetch_window
+        self.placement = placement
         # optional repro.core.pipeline.IOScheduler shared with the other
         # startup engines (window fetches hold "dfs" tokens)
         self.sched = sched
-        self._local = Path(local_cache) if local_cache else None
-        if self._local is not None:
-            self._local.mkdir(parents=True, exist_ok=True)
+        if isinstance(local_cache, NodeCache):
+            self._local: Optional[NodeCache] = local_cache
+        elif local_cache is not None:
+            self._local = NodeCache(local_cache,
+                                    capacity_bytes=local_cache_bytes)
+        else:
+            self._local = None
         self._flight_master = threading.Lock()
         self._in_flight: dict[str, threading.Lock] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
-        # meta blobs are immutable per key (create-once, delete-on-expire),
-        # so concurrent restores share one DFS meta read
+        # meta blobs are treated as immutable per (key, generation):
+        # create() and expire() both invalidate, so concurrent restores
+        # share one DFS meta read without ever serving a stale entry
         self._meta_cache: dict[str, dict] = {}
         self.stats = {"dfs_archive_fetches": 0, "local_cache_hits": 0}
 
@@ -244,13 +264,17 @@ class EnvCache:
             self.mount.exists(self._meta_path(key))
 
     def expire(self, key: str):
+        """Delete ``key``'s DFS archive + meta AND every local trace of it:
+        the in-memory meta cache and any node-local cached archive for the
+        key (all content-addressed generations).  Skipping either would let
+        a re-snapshot under the same job key restore a stale environment."""
         for p in (self._data_path(key), self._meta_path(key)):
             if self.mount.exists(p):
                 self.mount.hdfs.delete(self.mount._full(p))
         with self._flight_master:
             self._meta_cache.pop(key, None)
         if self._local is not None:
-            self._local_path(key).unlink(missing_ok=True)
+            self._local.invalidate_prefix(f"{key}.")
 
     # ----- create (first run, node 0) -----
 
@@ -266,21 +290,47 @@ class EnvCache:
                 tar.add(target / rel, arcname=rel)
         raw = buf.getvalue()
         packed = _compress(raw)
-        self.mount.write(self._data_path(key), packed, striped=striped)
+        self.mount.write(self._data_path(key), packed, striped=striped,
+                         placement=self.placement)
         meta = {"key": key, "files": len(changed),
                 "raw_bytes": len(raw), "packed_bytes": len(packed),
+                # content address of this archive generation: node-local
+                # cache entries are keyed by it, so a re-snapshot under
+                # the SAME job key can never be served a stale archive
+                "digest": hashlib.sha256(packed).hexdigest(),
                 "compression": COMPRESSION, "created": time.time(),
                 "job_params": job_params or {}}
         self.mount.write(self._meta_path(key),
                          json.dumps(meta).encode())
         with self._flight_master:
             self._meta_cache[key] = meta
+        if self._local is not None:
+            # stale generations of this key are garbage now (expire may
+            # not have run on this node before the re-create)
+            for stale in self._local.keys():
+                if stale.startswith(f"{key}.") \
+                        and stale != self._entry_key(key, meta):
+                    self._local.invalidate(stale)
         return meta
 
     # ----- restore (subsequent runs, every node) -----
 
-    def _local_path(self, key: str) -> Path:
-        return self._local / f"{key}.tar.{COMPRESSION}"
+    @staticmethod
+    def _entry_key(key: str, meta: Optional[dict]) -> str:
+        """Content-addressed node-cache key for one archive generation."""
+        digest = (meta or {}).get("digest", "v0")[:16]
+        return f"{key}.{digest}.tar.{COMPRESSION}"
+
+    def _local_path(self, key: str, meta: Optional[dict] = None) -> Path:
+        """Node-local path of ``key``'s cached archive.  Without ``meta``,
+        resolves the (single live) generation by prefix — a test/debug
+        convenience; the restore path always passes the meta through."""
+        assert self._local is not None
+        if meta is None:
+            for k in self._local.keys():
+                if k.startswith(f"{key}."):
+                    return self._local.path(k)
+        return self._local.path(self._entry_key(key, meta))
 
     def _key_lock(self, key: str) -> threading.Lock:
         with self._flight_master:
@@ -294,29 +344,38 @@ class EnvCache:
         return _WindowedReader(handle, len(handle), self.fetch_window,
                                sched=self.sched, priority=priority)
 
-    def _open_archive(self, key: str, priority: int = 0) -> BinaryIO:
-        """Packed-archive byte stream: node-local cache file when enabled
-        (one DFS fetch per node, singleflight), direct DFS stream otherwise.
-        """
+    def _open_archive(self, key: str, meta: Optional[dict],
+                      priority: int = 0) -> BinaryIO:
+        """Packed-archive byte stream: node-cache entry when enabled (one
+        DFS fetch per node — the cache's singleflight admission), direct
+        DFS stream otherwise."""
         if self._local is None:
             return self._fetch_archive(key, priority)
-        p = self._local_path(key)
-        if not p.exists():
-            with self._key_lock(key):
-                if not p.exists():
-                    tmp = p.with_name(p.name + f".tmp{os.getpid()}")
-                    src = self._fetch_archive(key, priority)
-                    with open(tmp, "wb") as out:
-                        while True:
-                            chunk = src.read(self.fetch_window)
-                            if not chunk:
-                                break
-                            out.write(chunk)
-                    tmp.replace(p)
-                    return open(p, "rb")
-        with self._flight_master:
-            self.stats["local_cache_hits"] += 1
-        return open(p, "rb")
+
+        def producer(tmp: Path):
+            src = self._fetch_archive(key, priority)
+            with open(tmp, "wb") as out:
+                while True:
+                    chunk = src.read(self.fetch_window)
+                    if not chunk:
+                        break
+                    out.write(chunk)
+
+        # under a byte bound, another key's admission can evict this entry
+        # between fetch_path returning and the open — an eviction race is
+        # a miss, so retry once and then stream straight from the DFS
+        for _attempt in range(2):
+            path, hit = self._local.fetch_path(self._entry_key(key, meta),
+                                               producer)
+            try:
+                handle = open(path, "rb")
+            except FileNotFoundError:
+                continue
+            if hit:
+                with self._flight_master:
+                    self.stats["local_cache_hits"] += 1
+            return handle
+        return self._fetch_archive(key, priority)
 
     def _extract_stream(self, packed: BinaryIO, target: Path):
         """Stream-decompress ``packed`` and extract members as they arrive.
@@ -383,7 +442,7 @@ class EnvCache:
                         self.mount.open(self._meta_path(key)).read())
                     with self._flight_master:
                         self._meta_cache[key] = meta
-        packed = self._open_archive(key, priority)
+        packed = self._open_archive(key, meta, priority)
         try:
             try:
                 self._extract_stream(packed, Path(target))
@@ -394,7 +453,7 @@ class EnvCache:
                 # invalidate it and retry once straight from the DFS — only
                 # a second failure (bad DFS copy) propagates
                 packed.close()
-                self._local_path(key).unlink(missing_ok=True)
+                self._local.invalidate(self._entry_key(key, meta))
                 packed = self._fetch_archive(key, priority)
                 self._extract_stream(packed, Path(target))
         finally:

@@ -1,0 +1,18 @@
+"""The storage fabric: shared node caching, placement and erasure coding
+for every BootSeer storage consumer (blockstore, envcache, striped DFS).
+
+See repro.fabric.cache (NodeCache + eviction policies),
+repro.fabric.placement (striped / replicated / erasure strategies) and
+repro.fabric.gf256 (the Reed-Solomon kernel).
+"""
+
+from repro.fabric.cache import (EvictionPolicy, HotScorePolicy, LRUPolicy,
+                                NodeCache)
+from repro.fabric.gf256 import rs_decode, rs_encode
+from repro.fabric.placement import ERASURE, REPLICATED, STRIPED, Placement
+
+__all__ = [
+    "EvictionPolicy", "HotScorePolicy", "LRUPolicy", "NodeCache",
+    "Placement", "STRIPED", "REPLICATED", "ERASURE",
+    "rs_encode", "rs_decode",
+]

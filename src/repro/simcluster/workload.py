@@ -65,6 +65,17 @@ class ClusterParams:
     hdfs_stream_rate: float = 0.5 * GB  # single-block-group stream (plain)
     stripe_width: int = 8              # striped parallel streams
 
+    # storage-fabric checkpoint placement (repro.fabric.placement):
+    # "striped" = no redundancy (a lost stripe fails the resume);
+    # "erasure" = Reed-Solomon k data + m parity stripe files — healthy
+    # reads cost ~nothing extra, a degraded read re-reads k source
+    # ranges per missing range (amp = 1 + d(k-1)/k) and pays a GF(256)
+    # decode pass over the source bytes
+    ckpt_placement: str = "striped"
+    erasure_k: int = 8
+    erasure_m: int = 2
+    erasure_decode_rate: float = 2.0 * GB   # vectorized GF decode, B/s/node
+
     # node variability (§3.3)
     jitter_sigma: float = 0.15         # lognormal sigma on local work
     slow_node_p: float = 0.008         # rare straggler probability
@@ -89,6 +100,12 @@ class StartupWorkload:
     # HDFS — serving capacity scales with warm peers and the local extract
     # work shrinks (copy-on-write mapping instead of unpacking a tarball).
     rdma_env_cache: bool = False
+    # degraded-mode restore: stripe files lost at resume time.  With
+    # ckpt_placement="striped" a lost stripe aborts the resume (the
+    # pre-fabric StripeMissingError) — modelled as infeasible; with
+    # "erasure" the restore survives up to erasure_m lost stripes at the
+    # modelled read amplification + decode cost.
+    lost_stripes: int = 0
     seed: int = 0
 
     def _jitter(self, rng, n: int) -> np.ndarray:
@@ -252,10 +269,30 @@ class StartupWorkload:
         # "dfs" token pool
         res = FluidResource("hdfs_ckpt", p.hdfs_capacity, stream,
                             1 << 30, 1.0, share_group="hdfs_pool")
+        # storage-fabric placement: a degraded erasure restore re-reads
+        # k source ranges (k-1 surviving data + parity) per missing range
+        # and pays a GF(256) decode pass over the source bytes; plain
+        # striping cannot restore through a lost stripe at all
+        read_amp, decode_s = 1.0, 0.0
+        if self.lost_stripes > 0 and warm:
+            if p.ckpt_placement != "erasure":
+                raise ValueError(
+                    f"lost_stripes={self.lost_stripes} with "
+                    f"placement={p.ckpt_placement!r}: a striped restore "
+                    "cannot survive a lost stripe file "
+                    "(StripeMissingError) — use ckpt_placement='erasure'")
+            d = self.lost_stripes
+            if d > p.erasure_m:
+                raise ValueError(
+                    f"lost_stripes={d} exceeds parity m={p.erasure_m}: "
+                    "unrecoverable even under erasure placement")
+            k = p.erasure_k
+            read_amp = 1.0 + d * (k - 1) / k
+            decode_s = (per_node_ckpt * d / k * k) / p.erasure_decode_rate
         transfers, extra = [], {}
         for i, node in enumerate(nodes):
-            transfers.append(Transfer(node, res, per_node_ckpt))
-            extra[node] = p.model_setup_s * jit[i]
+            transfers.append(Transfer(node, res, per_node_ckpt * read_amp))
+            extra[node] = p.model_setup_s * jit[i] + decode_s
         record_stage(Stage.MODEL_INIT, transfers, extra)
 
         node_level = {n: sum(stages[s][n] for s in stages) for n in nodes}
@@ -271,7 +308,8 @@ class StartupWorkload:
         return {"stages": stages, "node_level": node_level,
                 "job_level": job_level, "pipelined": pipelined,
                 "critical_path": critical_path,
-                "registry_egress_bytes": registry_egress}
+                "registry_egress_bytes": registry_egress,
+                "read_amplification": read_amp}
 
     # ------------------------------------------------------------------
     def _overlapped(self, stage_parts: dict, nodes: list) -> tuple:

@@ -86,6 +86,67 @@ class TestEnvCache:
         assert not cache.exists(key)
         assert cache.restore(key, tmp_path / "b") is None
 
+    def test_expire_invalidates_meta_and_local_archive(self, mount,
+                                                       tmp_path):
+        """Regression (fabric satellite): expire + re-snapshot under the
+        SAME job key must restore the NEW environment — a stale in-memory
+        meta or node-local archive would silently resurrect the old env."""
+        cache = EnvCache(mount, local_cache=tmp_path / "local")
+        key = job_cache_key({"deps": ["pkg==1"]})
+        t0 = tmp_path / "v1"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0, tag="v1")
+        cache.create(key, t0, before)
+        assert cache.restore(key, tmp_path / "n0") is not None  # warms both
+        assert (tmp_path / "n0" / "pkg" / "__init__.py").read_text() \
+            == "version = 'v1'\n"
+
+        cache.expire(key)
+        assert not list((tmp_path / "local").glob(f"{key}*")), \
+            "expire left a node-local archive behind"
+        t1 = tmp_path / "v2"
+        t1.mkdir()
+        before = snapshot_dir(t1)
+        _install(t1, tag="v2")
+        cache.create(key, t1, before)
+
+        meta = cache.restore(key, tmp_path / "n1")
+        assert meta is not None
+        assert (tmp_path / "n1" / "pkg" / "__init__.py").read_text() \
+            == "version = 'v2'\n"
+        # the fetch really came from the new archive, not a stale local one
+        assert cache.stats["dfs_archive_fetches"] == 2
+
+    def test_recreate_without_expire_never_serves_stale_archive(
+            self, mount, tmp_path):
+        """Content-addressed fabric entries: a SECOND EnvCache instance
+        (another worker sharing the node-local dir) whose local cache
+        still holds the v1 archive must fetch v2 after a re-snapshot —
+        the new meta digest simply never matches the old entry."""
+        local = tmp_path / "local"
+        key = job_cache_key({"deps": ["pkg==1"]})
+        creator = EnvCache(mount)                # control plane: no local
+        t0 = tmp_path / "v1"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0, tag="v1")
+        creator.create(key, t0, before)
+        worker = EnvCache(mount, local_cache=local)
+        assert worker.restore(key, tmp_path / "b0") is not None  # caches v1
+
+        t1 = tmp_path / "v2"
+        t1.mkdir()
+        before = snapshot_dir(t1)
+        _install(t1, tag="v2")
+        creator.create(key, t1, before)          # re-snapshot, NO expire
+        assert list(local.iterdir()), "v1 archive should still be on disk"
+
+        fresh = EnvCache(mount, local_cache=local)  # restarted worker
+        assert fresh.restore(key, tmp_path / "c0") is not None
+        assert (tmp_path / "c0" / "pkg" / "__init__.py").read_text() \
+            == "version = 'v2'\n"
+
     def test_only_diff_is_packed(self, mount, tmp_path):
         """Pre-existing files must not bloat the cache archive."""
         cache = EnvCache(mount)

@@ -1,0 +1,603 @@
+"""Storage fabric: GF(256)/Reed-Solomon kernel, NodeCache semantics,
+placement fault matrix, and degraded restores end to end."""
+
+import threading
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.dfs.hdfs import HdfsCluster
+from repro.dfs.striped import (StripeCorruptError, StripedReader,
+                               StripeMissingError, write_striped)
+from repro.fabric import (ERASURE, HotScorePolicy, NodeCache, Placement,
+                          rs_decode, rs_encode)
+from repro.fabric.gf256 import (cauchy_matrix, gf_inv, gf_matinv, gf_mul,
+                                gf_mul_bytes)
+
+CHUNK = 4 * 1024
+STRIPE = 16 * 1024
+
+
+# ---------------------------------------------------------------------------
+# GF(256) / Reed-Solomon kernel
+# ---------------------------------------------------------------------------
+
+class TestGF256:
+    def test_field_axioms_sampled(self):
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            a, b, c = (int(x) for x in rng.integers(0, 256, 3))
+            assert gf_mul(a, b) == gf_mul(b, a)
+            assert gf_mul(a, gf_mul(b, c)) == gf_mul(gf_mul(a, b), c)
+            assert gf_mul(a, 1) == a
+            assert gf_mul(a, 0) == 0
+        for a in range(1, 256):
+            assert gf_mul(a, gf_inv(a)) == 1
+
+    def test_vectorized_mul_matches_scalar(self):
+        rng = np.random.default_rng(1)
+        data = rng.integers(0, 256, 512, dtype=np.uint8)
+        for c in (0, 1, 2, 7, 91, 255):
+            vec = gf_mul_bytes(c, data)
+            assert all(int(v) == gf_mul(c, int(d))
+                       for v, d in zip(vec[:64], data[:64]))
+
+    def test_matinv_roundtrip(self):
+        rng = np.random.default_rng(2)
+        for n in (1, 3, 8):
+            # Cauchy submatrices are always invertible
+            a = [row[:n] for row in cauchy_matrix(n, n)]
+            inv = gf_matinv(a)
+            # a @ inv == I over GF(256)
+            for i in range(n):
+                for j in range(n):
+                    s = 0
+                    for l in range(n):
+                        s ^= gf_mul(a[i][l], inv[l][j])
+                    assert s == (1 if i == j else 0)
+
+    @pytest.mark.parametrize("k,m", [(4, 1), (8, 2), (5, 3)])
+    def test_rs_any_m_erasures_recover(self, k, m, rng):
+        data = [rng.integers(0, 256, 300, dtype=np.uint8) for _ in range(k)]
+        parity = rs_encode(data, m)
+        shards = {i: d for i, d in enumerate(data)}
+        shards.update({k + j: p for j, p in enumerate(parity)})
+        for trial in range(12):
+            lost = rng.choice(k + m, size=rng.integers(1, m + 1),
+                              replace=False)
+            surv = {i: v for i, v in shards.items() if i not in lost}
+            dec = rs_decode(surv, k, m, [int(x) for x in lost])
+            for i in lost:
+                ref = data[i] if i < k else parity[i - k]
+                assert np.array_equal(dec[int(i)], ref)
+
+    def test_rs_too_many_erasures_raises(self, rng):
+        data = [rng.integers(0, 256, 64, dtype=np.uint8) for _ in range(4)]
+        parity = rs_encode(data, 2)
+        shards = {0: data[0], 1: data[1], 4: parity[0]}  # only 3 of k=4
+        with pytest.raises(ValueError, match="at least k"):
+            rs_decode(shards, 4, 2, [2, 3])
+
+
+# ---------------------------------------------------------------------------
+# NodeCache
+# ---------------------------------------------------------------------------
+
+class TestNodeCache:
+    def test_byte_bound_and_lru_order(self, tmp_path):
+        cache = NodeCache(tmp_path, capacity_bytes=3000)
+        for i in range(3):
+            cache.put(f"k{i}", b"x" * 1000)
+        cache.read("k0")                  # k0 now most-recent
+        cache.put("k3", b"y" * 1000)      # evicts k1 (LRU)
+        assert not cache.has("k1")
+        assert cache.has("k0") and cache.has("k2") and cache.has("k3")
+        assert cache.bytes_used <= 3000
+        assert cache.stats["evictions"] == 1
+
+    def test_concurrent_admits_respect_bound(self, tmp_path):
+        cache = NodeCache(tmp_path, capacity_bytes=8 * 1000)
+        with ThreadPoolExecutor(8) as ex:
+            list(ex.map(lambda i: cache.put(f"k{i:03d}", b"z" * 1000),
+                        range(64)))
+        assert cache.bytes_used <= 8 * 1000
+        assert cache.stats["evictions"] >= 56
+
+    def test_pinned_entries_survive_pressure(self, tmp_path):
+        cache = NodeCache(tmp_path, capacity_bytes=2000)
+        cache.put("hot", b"h" * 1000, job="job1")
+        for i in range(5):
+            cache.put(f"cold{i}", b"c" * 1000)
+        assert cache.has("hot")           # pinned: never a victim
+        cache.unpin_job("job1")
+        for i in range(5, 8):
+            cache.put(f"cold{i}", b"c" * 1000)
+        assert not cache.has("hot")       # unpinned: ordinary LRU victim
+
+    def test_hot_score_policy_evicts_coldest(self, tmp_path):
+        scores = {"hot": 5.0, "warm": 1.0}
+        cache = NodeCache(tmp_path, capacity_bytes=2000, policy="hot",
+                          score_fn=lambda k: scores.get(k, 0.0))
+        cache.put("hot", b"h" * 1000)
+        cache.put("cold", b"c" * 1000)
+        cache.put("warm", b"w" * 1000)    # evicts "cold" (score 0)
+        assert cache.has("hot") and cache.has("warm")
+        assert not cache.has("cold")
+
+    def test_singleflight_one_producer(self, tmp_path):
+        cache = NodeCache(tmp_path)
+        calls = []
+        gate = threading.Barrier(8)
+
+        def fetch():
+            calls.append(1)
+            return b"payload"
+
+        def one(_):
+            gate.wait()
+            return cache.get_or_fetch("key", fetch)
+
+        with ThreadPoolExecutor(8) as ex:
+            got = list(ex.map(one, range(8)))
+        assert got == [b"payload"] * 8
+        assert len(calls) == 1
+        assert cache.stats["misses"] == 1
+
+    def test_evict_listener_fires(self, tmp_path):
+        evicted = []
+        cache = NodeCache(tmp_path, capacity_bytes=1000)
+        cache.set_evict_listener("t", evicted.append)
+        cache.put("a", b"x" * 800)
+        cache.put("b", b"y" * 800)
+        assert evicted == ["a"]
+        cache.invalidate("b")
+        assert evicted == ["a", "b"]
+
+    def test_warm_restart_rebuilds_index(self, tmp_path):
+        NodeCache(tmp_path).put("survivor", b"data")
+        reborn = NodeCache(tmp_path, capacity_bytes=10_000)
+        assert reborn.has("survivor")
+        assert reborn.read("survivor") == b"data"
+        assert reborn.bytes_used == 4
+
+    def test_missing_read_raises_oserror_family(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            NodeCache(tmp_path).read("nope")
+
+    def test_invalidate_prefix(self, tmp_path):
+        cache = NodeCache(tmp_path)
+        cache.put("job1.aaa", b"1")
+        cache.put("job1.bbb", b"2")
+        cache.put("job2.ccc", b"3")
+        assert cache.invalidate_prefix("job1.") == 2
+        assert cache.keys() == ["job2.ccc"]
+
+
+# ---------------------------------------------------------------------------
+# placement fault matrix: {missing, truncated, corrupted} x {striped, erasure}
+# ---------------------------------------------------------------------------
+
+def _stripe_path(hdfs, reader, f):
+    group, name = reader.meta.files[f]
+    return hdfs.root / f"group{group:02d}" / name
+
+
+def _inject(hdfs, reader, f, fault: str):
+    p = _stripe_path(hdfs, reader, f)
+    if fault == "missing":
+        p.unlink()
+    elif fault == "truncated":
+        raw = p.read_bytes()
+        p.write_bytes(raw[:len(raw) // 2])
+    else:                                  # corrupted: bad bytes, same len
+        raw = bytearray(p.read_bytes())
+        raw[len(raw) // 3] ^= 0xA5
+        p.write_bytes(bytes(raw))
+
+
+class TestFaultMatrix:
+    @pytest.fixture()
+    def hdfs(self, tmp_path):
+        return HdfsCluster(tmp_path / "h", num_groups=10)
+
+    def _write(self, hdfs, rng, placement, path="/f"):
+        data = rng.integers(0, 256, 23 * CHUNK + 321,
+                            dtype=np.uint8).tobytes()
+        write_striped(hdfs, path, data, width=8, chunk=CHUNK,
+                      stripe=STRIPE, placement=placement)
+        return data
+
+    @pytest.mark.parametrize("fault", ["missing", "truncated", "corrupted"])
+    def test_striped_raises_or_returns(self, hdfs, rng, fault):
+        """Plain striping: missing/truncated raise StripeMissingError with
+        the SAME message fields as before the fabric; a corrupted payload
+        is invisible (no digests) — the gap erasure placement closes."""
+        data = self._write(hdfs, rng, None)
+        r = StripedReader(hdfs, "/f")
+        _inject(hdfs, r, 2, fault)
+        if fault == "corrupted":
+            got = r.read_all()
+            assert got != data and len(got) == len(data)
+            return
+        with pytest.raises(StripeMissingError) as ei:
+            r.read_all()
+        group, name = r.meta.files[2]
+        assert ei.value.name == name
+        assert ei.value.group == group
+        assert ei.value.file_index == 2
+        assert name in str(ei.value)
+        assert f"group {group}" in str(ei.value)
+        if fault == "truncated":
+            assert "truncated" in str(ei.value)
+
+    @pytest.mark.parametrize("fault", ["missing", "truncated", "corrupted"])
+    def test_erasure_recovers_and_detects(self, hdfs, rng, fault):
+        """Erasure placement: missing/truncated reconstruct from parity;
+        corruption is DETECTED via the per-chunk digest (and then also
+        repaired) — never returned as payload."""
+        data = self._write(hdfs, rng, Placement.erasure(2))
+        r = StripedReader(hdfs, "/f")
+        _inject(hdfs, r, 2, fault)
+        assert r.read_all() == data
+        assert r.stats["degraded_reads"] >= 1
+        assert r.stats["reconstructed_bytes"] > 0
+        if fault == "corrupted":
+            assert r.stats["corrupt_chunks"] >= 1
+        assert hdfs.fabric_stats["degraded_reads"] >= 1
+
+    def test_erasure_two_faults_within_parity(self, hdfs, rng):
+        data = self._write(hdfs, rng, Placement.erasure(2))
+        r = StripedReader(hdfs, "/f")
+        _inject(hdfs, r, 1, "missing")
+        _inject(hdfs, r, 5, "truncated")
+        assert r.read_all() == data
+        assert r.stats["degraded_reads"] == 2
+
+    def test_erasure_beyond_parity_raises(self, hdfs, rng):
+        self._write(hdfs, rng, Placement.erasure(2))
+        r = StripedReader(hdfs, "/f")
+        for f in (0, 1, 2):
+            _inject(hdfs, r, f, "missing")
+        with pytest.raises(StripeMissingError, match="unrecoverable"):
+            r.read_all()
+
+    def test_erasure_attrs_record_placement(self, hdfs, rng):
+        self._write(hdfs, rng, Placement.erasure(2))
+        pl = Placement.from_attrs(hdfs.attrs("/f")["placement"])
+        assert pl.kind == ERASURE
+        assert len(pl.parity_files) == 2
+        assert len(pl.file_lengths) == 8
+        # parity really is on disk and chunk CRCs cover every data chunk
+        for g, n in pl.parity_files:
+            assert (hdfs.root / f"group{g:02d}" / n).stat().st_size \
+                == pl.parity_length
+        for f, crcs in enumerate(pl.chunk_crc["data"]):
+            assert len(crcs) == pl.file_lengths[f] // CHUNK
+
+    def test_erasure_noverify_healthy_reads_exact_ranges(self, hdfs, rng):
+        """verify=False drops the CRC checks, so the healthy path must
+        read exact byte ranges like plain striping (no chunk-granular
+        read amplification) — and still recover a lost file."""
+        data = self._write(hdfs, rng, Placement.erasure(2, verify=False))
+        r = StripedReader(hdfs, "/f")
+        hdfs.reset_counters()
+        assert r.pread(CHUNK + 17, 100) == data[CHUNK + 17:CHUNK + 117]
+        assert hdfs.read_bytes == 100
+        _inject(hdfs, r, 2, "missing")
+        r2 = StripedReader(hdfs, "/f")
+        assert r2.read_all() == data
+        assert r2.stats["degraded_reads"] == 1
+
+    def test_unknown_placement_kind_rejected_at_open(self, hdfs, rng):
+        self._write(hdfs, rng, Placement.erasure(2))
+        hdfs.attrs("/f")["placement"]["kind"] = "mirrored"
+        with pytest.raises(ValueError, match="unknown placement kind"):
+            StripedReader(hdfs, "/f")
+
+    def test_striped_attrs_unchanged(self, hdfs, rng):
+        """Plain striping must write byte-identical metadata to the
+        pre-fabric format: no placement key at all."""
+        self._write(hdfs, rng, None)
+        assert "placement" not in hdfs.attrs("/f")
+
+    def test_replicated_failover(self, hdfs, rng):
+        data = self._write(hdfs, rng, Placement.replicated(1))
+        r = StripedReader(hdfs, "/f")
+        _inject(hdfs, r, 0, "missing")
+        assert r.read_all() == data
+        assert r.stats["degraded_reads"] == 1
+        # primary AND replica gone -> loud failure naming the file
+        pl = Placement.from_attrs(hdfs.attrs("/f")["placement"])
+        rg, rn = pl.replica_files[0][0]
+        (hdfs.root / f"group{rg:02d}" / rn).unlink()
+        r2 = StripedReader(hdfs, "/f")
+        with pytest.raises(StripeMissingError, match="replicas"):
+            r2.read_all()
+
+    def test_corrupt_chunk_digest_mismatch_names_chunk(self, hdfs, rng):
+        """A reconstruction that cannot satisfy the stored digest (parity
+        corrupted too, beyond budget) raises StripeCorruptError."""
+        data = self._write(hdfs, rng, Placement.erasure(1))
+        r = StripedReader(hdfs, "/f")
+        # corrupt a data chunk AND the single parity file at the same row
+        _inject(hdfs, r, 2, "corrupted")
+        pl = Placement.from_attrs(hdfs.attrs("/f")["placement"])
+        pg, pn = pl.parity_files[0]
+        pp = hdfs.root / f"group{pg:02d}" / pn
+        raw = bytearray(pp.read_bytes())
+        for i in range(0, len(raw)):
+            raw[i] ^= 0x5A
+        pp.write_bytes(bytes(raw))
+        with pytest.raises(StripeMissingError):
+            r.read_all()
+        del data
+
+
+# ---------------------------------------------------------------------------
+# degraded checkpoint restores (planner + runtime integration)
+# ---------------------------------------------------------------------------
+
+class TestDegradedRestore:
+    def _world(self, tmp_path, rng, placement):
+        from repro.ckpt.checkpoint import Checkpointer
+
+        hdfs = HdfsCluster(tmp_path / "h", num_groups=10)
+        ck = Checkpointer(hdfs, striped=True, width=8,
+                          placement=placement, chunk=CHUNK, stripe=STRIPE)
+        params = {"w": rng.standard_normal((64, 257)).astype(np.float32)}
+        opt = {"mu": {"w": rng.standard_normal((64, 257)).astype(np.float32)}}
+        ck.save(100, params, opt)
+        return hdfs, ck, (params, opt)
+
+    @staticmethod
+    def _hash(trees):
+        import hashlib
+        import jax
+        h = hashlib.sha256()
+        for t in trees:
+            for leaf in jax.tree_util.tree_leaves(t):
+                h.update(np.asarray(leaf).tobytes())
+        return h.hexdigest()
+
+    def test_any_single_stripe_file_loss_restores_identically(
+            self, tmp_path, rng):
+        """The acceptance matrix: with erasure (k=8, m=2) deleting ANY
+        single physical file (each data stripe AND each parity file)
+        yields a successful, byte-identical planned restore."""
+        hdfs, ck, trees = self._world(tmp_path, rng, Placement.erasure(2))
+        ref = self._hash(ck.restore_planned(100, *trees))
+        assert ref == self._hash(trees)
+        striped = hdfs.attrs(ck.data_path(100))["striped"]
+        pl = Placement.from_attrs(hdfs.attrs(ck.data_path(100))["placement"])
+        physical = [tuple(f) for f in striped["files"]] \
+            + list(pl.parity_files)
+        assert len(physical) == 10
+        for g, n in physical:
+            p = hdfs.root / f"group{g:02d}" / n
+            backup = p.read_bytes()
+            p.unlink()
+            got = self._hash(ck.restore_planned(100, *trees))
+            assert got == ref, f"restore diverged with {n} deleted"
+            p.write_bytes(backup)
+
+    def test_reconstruction_counted_in_dfs_accounting(self, tmp_path, rng):
+        from repro.ckpt.plan import build_restore_plan, read_plan
+
+        hdfs, ck, _trees = self._world(tmp_path, rng, Placement.erasure(2))
+        index = ck.load_index(100)
+        plan = build_restore_plan(index)
+        healthy_reader = ck._reader(100)
+        hdfs.reset_counters()
+        healthy = read_plan(healthy_reader, plan)
+        healthy_dfs = hdfs.read_bytes
+
+        striped = hdfs.attrs(ck.data_path(100))["striped"]
+        g, n = striped["files"][4]
+        (hdfs.root / f"group{g:02d}" / n).unlink()
+        degraded_reader = ck._reader(100)
+        hdfs.reset_counters()
+        degraded = read_plan(degraded_reader, plan)
+        # read_plan reports the bytes that actually hit the DFS, and the
+        # cluster counters agree: reconstruction I/O is visible
+        assert degraded > healthy
+        assert degraded_reader.stats["reconstruction_read_bytes"] > 0
+        assert hdfs.read_bytes >= \
+            degraded_reader.stats["reconstruction_read_bytes"]
+        assert hdfs.fabric_stats["degraded_reads"] >= 1
+        assert healthy == plan.planned_bytes
+
+    def test_degraded_read_flows_through_scheduler(self, tmp_path, rng):
+        from repro.core.pipeline import CRITICAL, IOScheduler
+
+        hdfs, ck, trees = self._world(tmp_path, rng, Placement.erasure(2))
+        striped = hdfs.attrs(ck.data_path(100))["striped"]
+        g, n = striped["files"][0]
+        (hdfs.root / f"group{g:02d}" / n).unlink()
+        sched = IOScheduler()
+        reader = ck._reader(100, sched=sched, priority=CRITICAL)
+        got = reader.read_all()
+        assert len(got) == reader.size
+        snap = sched.snapshot()
+        # reconstruction source reads held dfs tokens at CRITICAL priority
+        assert snap["dfs"]["bytes"]["critical"] >= \
+            reader.stats["reconstruction_read_bytes"]
+
+    def test_striped_placement_still_fails_loud(self, tmp_path, rng):
+        hdfs, ck, trees = self._world(tmp_path, rng, None)
+        striped = hdfs.attrs(ck.data_path(100))["striped"]
+        g, n = striped["files"][1]
+        (hdfs.root / f"group{g:02d}" / n).unlink()
+        with pytest.raises(StripeMissingError):
+            ck.restore_planned(100, *trees)
+
+
+# ---------------------------------------------------------------------------
+# runtime integration: notes counters + bounded caches under pressure
+# ---------------------------------------------------------------------------
+
+class TestRuntimeFabric:
+    BS = 16 * 1024
+
+    def _env(self, tmp_path, rng, placement=None):
+        from repro.blockstore.image import build_image
+        from repro.blockstore.registry import Registry
+        from repro.ckpt.checkpoint import Checkpointer
+
+        src = tmp_path / "src"
+        (src / "bin").mkdir(parents=True)
+        (src / "bin" / "start").write_bytes(
+            rng.integers(0, 256, 6 * self.BS, dtype=np.uint8).tobytes())
+        (src / "bulk.bin").write_bytes(
+            rng.integers(0, 256, 20 * self.BS, dtype=np.uint8).tobytes())
+        reg = Registry(tmp_path / "reg")
+        build_image(src, reg, "img", block_size=self.BS)
+        hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=10)
+        ck = Checkpointer(hdfs, striped=True, width=8,
+                          placement=placement, chunk=CHUNK, stripe=STRIPE)
+        params = {"w": rng.standard_normal((64, 513)).astype(np.float32)}
+        ck.save(100, params)
+        return reg, hdfs, ck
+
+    def _spec(self, n=2):
+        from repro.core.bootseer import JobSpec
+
+        return JobSpec(
+            job_id="fabjob", image="img", num_nodes=n,
+            job_params={"deps": ["a==1"]},
+            startup_reads=[("bin/start", 0, -1)],
+            env_setup=lambda target, rank: (target / "d.py").write_text("x"),
+            resume_step=100, resume_plan="rows")
+
+    def test_degraded_restore_surfaces_in_notes(self, tmp_path, rng):
+        from repro.core.bootseer import BootseerRuntime
+
+        reg, hdfs, ck = self._env(tmp_path, rng,
+                                  placement=Placement.erasure(2))
+        striped = hdfs.attrs(ck.data_path(100))["striped"]
+        g, n = striped["files"][2]
+        (hdfs.root / f"group{g:02d}" / n).unlink()
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "w", optimize=True) as rt:
+            res = rt.run_startup(self._spec(), checkpointer=ck)
+            rt.drain_deferred()
+        assert res.notes["degraded_reads"] >= 1
+        assert res.notes["reconstructed_bytes"] > 0
+
+    def test_bounded_cache_warm_startup_under_pressure(self, tmp_path, rng):
+        """The acceptance cell: warm startup with cache = 0.5x working set
+        completes, evicts, never stampedes the singleflight, and leaves NO
+        evicted block advertised in the swarm availability index."""
+        from repro.core.bootseer import BootseerRuntime
+
+        reg, hdfs, ck = self._env(tmp_path, rng)
+        manifest = reg.get_manifest("img")
+        working_set = sum(len(reg.get_block(h))
+                          for h in manifest.unique_blocks)
+
+        fetch_counts: dict = {}
+        orig_get = reg.get_block
+
+        def counting_get(h):
+            fetch_counts[h] = fetch_counts.get(h, 0) + 1
+            return orig_get(h)
+
+        reg.get_block = counting_get
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "w", optimize=True,
+                             cache_bytes=int(working_set * 0.5),
+                             cache_policy="lru") as rt:
+            rt.run_startup(self._spec(), checkpointer=ck)   # record run
+            rt.drain_deferred()
+            # warm run 1: hot prefetch + deferred cold stream churns the
+            # bounded cache past capacity (evictions in the background)
+            rt.run_startup(self._spec(), checkpointer=ck)
+            rt.drain_deferred()
+            assert sum(c.stats["evictions"]
+                       for c in rt._node_caches.values()) > 0
+            # warm run 2: the cold stream rotated the LRU hot set out, so
+            # the startup itself refetches + evicts — on the clock
+            res = rt.run_startup(self._spec(), checkpointer=ck)
+            rt.drain_deferred()
+            assert res.notes["evictions"] > 0
+            # no singleflight stampede: a block is fetched again only
+            # after an eviction made it a genuine miss
+            total_evictions = sum(c.stats["evictions"]
+                                  for c in rt._node_caches.values())
+            for h, count in fetch_counts.items():
+                assert count <= 1 + total_evictions
+            # availability-index consistency: every block the swarm
+            # attributes to a client is actually on that client's disk
+            for (job, rank), cache in rt._node_caches.items():
+                cid_prefix = f"{job}/n{rank}:"
+                for h in manifest.unique_blocks:
+                    sh = rt.swarm._shard(h)
+                    with sh.lock:
+                        holders = set(sh.holders.get(h, ()))
+                    for cid in holders:
+                        if cid.startswith(cid_prefix):
+                            assert cache.has(h), \
+                                f"evicted block {h[:8]} still advertised"
+
+    def test_healthy_fabric_run_reports_zero_degraded(self, tmp_path, rng):
+        from repro.core.bootseer import BootseerRuntime
+
+        reg, hdfs, ck = self._env(tmp_path, rng,
+                                  placement=Placement.erasure(2))
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "w", optimize=True) as rt:
+            res = rt.run_startup(self._spec(), checkpointer=ck)
+            rt.drain_deferred()
+        assert res.notes["degraded_reads"] == 0
+        assert res.notes["corrupt_chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# simcluster: degraded-mode model
+# ---------------------------------------------------------------------------
+
+class TestSimFabric:
+    def test_degraded_erasure_amplifies_model_init(self):
+        from repro.simcluster.workload import ClusterParams, StartupWorkload
+
+        params = ClusterParams(ckpt_placement="erasure")
+        healthy = StartupWorkload(bootseer=True, seed=3,
+                                  params=params).run(8)
+        degraded = StartupWorkload(bootseer=True, seed=3, params=params,
+                                   lost_stripes=1).run(8)
+        assert healthy["read_amplification"] == 1.0
+        assert 1.0 < degraded["read_amplification"] <= 2.0
+        h = max(healthy["stages"]["model_init"].values())
+        d = max(degraded["stages"]["model_init"].values())
+        assert h < d <= 2.5 * h
+
+    def test_striped_cannot_survive_lost_stripe(self):
+        from repro.simcluster.workload import StartupWorkload
+
+        with pytest.raises(ValueError, match="StripeMissingError"):
+            StartupWorkload(bootseer=True, seed=3, lost_stripes=1).run(4)
+
+    def test_lost_beyond_parity_rejected(self):
+        from repro.simcluster.workload import ClusterParams, StartupWorkload
+
+        params = ClusterParams(ckpt_placement="erasure", erasure_m=2)
+        with pytest.raises(ValueError, match="unrecoverable"):
+            StartupWorkload(bootseer=True, seed=3, params=params,
+                            lost_stripes=3).run(4)
+
+
+class TestHotScoreWiring:
+    def test_hot_policy_uses_service_scores(self, tmp_path):
+        from repro.blockstore.prefetch import HotBlockService
+
+        svc = HotBlockService(tmp_path / "hot")
+        svc.record("digestA", [{"hash": "deadbeef", "t": 0.1}])
+        svc.record("digestB", [{"hash": "cafebabe", "t": 0.2},
+                               {"hash": "deadbeef", "t": 0.3}])
+        idx = svc.score_index()
+        assert idx["deadbeef"] >= idx["cafebabe"] > 0.0
+        policy = HotScorePolicy(lambda k: idx.get(k, 0.0))
+        for k in ("coldkey", "deadbeef", "cafebabe"):
+            policy.on_admit(k)
+        assert next(iter(policy.victims())) == "coldkey"

@@ -441,3 +441,76 @@ class TestEgressBudget:
         # and the load was spread: no single peer served everything
         served = [s["blocks_served"] for s in swarm.stats.values()]
         assert sorted(served)[-1] < sum(served)
+
+
+class TestVanishedBlocks:
+    """Fabric satellite: the availability index and warm-rejoin
+    announcements are ADVISORY — a block can leave a holder's disk
+    (cache eviction, crash mid-publish) after it was advertised, and a
+    fetch routed there must fall through to the singleflight/registry
+    path instead of erroring the waiter."""
+
+    def test_fetch_from_peer_with_vanished_block_falls_through(
+            self, image_env, tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        holder = LazyImageClient(man, reg, tmp_path / "h0", node_id="n0",
+                                 peers=swarm)
+        holder.read_file("app.bin")          # cache + announce app blocks
+        h = man.file_map()["app.bin"].blocks[0]
+        assert swarm.holder_count(h) == 1
+        holder.cache.path(h).unlink()         # vanish behind the index
+
+        req = LazyImageClient(man, reg, tmp_path / "h1", node_id="n1",
+                              peers=swarm)
+        data = req.ensure_block(h)            # must not raise
+        assert data == reg.get_block(h)
+        assert req.stats["registry_fetches"] == 1
+        # the stale holder was pruned and the new holder advertised
+        sh = swarm._shard(h)
+        with sh.lock:
+            holders = set(sh.holders.get(h, ()))
+        assert holder.client_id not in holders
+        assert req.client_id in holders
+
+    def test_stale_rejoin_announcement_tolerated(self, image_env,
+                                                 tmp_path):
+        """cached_hashes rejoin announcement naming blocks that are gone
+        from disk (evicted between listing and serving) must not error
+        fetches routed there."""
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        ghost = LazyImageClient(man, reg, tmp_path / "g0", node_id="n0")
+        ghost.read_file("lib.bin")
+        hashes = ghost.cached_hashes()
+        for h in hashes:                      # blocks vanish post-listing
+            ghost.cache.path(h).unlink()
+        swarm.join(ghost)
+        swarm.announce(ghost, hashes)
+
+        req = LazyImageClient(man, reg, tmp_path / "g1", node_id="n1",
+                              peers=swarm)
+        got = req.read_file("lib.bin")
+        src = tmp / "src"
+        assert got == (src / "lib.bin").read_bytes()
+
+    def test_eviction_withdraws_from_index_eagerly(self, image_env,
+                                                   tmp_path):
+        """A bounded NodeCache eviction must remove the block from the
+        availability index BEFORE any peer is routed to it."""
+        from repro.fabric.cache import NodeCache
+
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        cache = NodeCache(tmp_path / "c0", capacity_bytes=4 * BS)
+        client = LazyImageClient(man, reg, cache.root, node_id="n0",
+                                 peers=swarm, cache=cache)
+        blocks = list(man.unique_blocks)
+        from repro.core.pipeline import DEFERRED
+        for h in blocks:                      # DEFERRED: no pins
+            client.ensure_block(h, priority=DEFERRED)
+        assert cache.stats["evictions"] > 0
+        for h in blocks:
+            if not cache.has(h):
+                assert swarm.holder_count(h) == 0, \
+                    f"evicted block {h[:8]} still advertised"
