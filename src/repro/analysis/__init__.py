@@ -1,0 +1,52 @@
+"""Concurrency lint for the startup stack (machine-checked invariants).
+
+Five PRs grew the startup path into a deeply concurrent system —
+singleflight admission in ``fabric/cache.py``, priority token pools in
+``core/pipeline.py``, a sharded lock-striped index in
+``blockstore/swarm.py``, shared I/O pools in ``dfs/striped.py`` /
+``envcache/snapshot.py`` — and every stampede/deadlock-class bug so far
+(PR 3's timed-out-waiter stampede, PR 5's concurrent-admit capacity race)
+was found by hand after the fact.  This package makes those invariants
+machine-checked:
+
+Static side (AST + intra-package call graph, stdlib only — no runtime
+imports, so it runs in a bare CI job):
+
+* :mod:`repro.analysis.callgraph` — module/class/function table and a
+  best-effort intra-package call graph (``self.m()``, module functions,
+  imported names, unique-method-name resolution).
+* :mod:`repro.analysis.locks` — lock *definitions* (``self._lock =
+  threading.Lock()``, module-level locks, lock **containers** like
+  ``self._flights.setdefault(k, Lock())`` and the methods that return
+  locks out of them) plus an expression resolver mapping any ``with X:``
+  / ``X.acquire()`` site back to a stable lock identity.
+* :mod:`repro.analysis.lockorder` — which locks are held when other
+  locks are acquired (propagated through the call graph); cycles in the
+  resulting digraph are potential deadlocks.
+* :mod:`repro.analysis.checks` — blocking-under-lock (DFS reads,
+  ``pool.submit(...).result()``, ``time.sleep``, ``IOScheduler.slot``,
+  unknown callbacks), acquire/release pairs that can escape on exception
+  paths, ``slot()`` outside ``with``, dead locks, and lock containers
+  with no removal path.
+* :mod:`repro.analysis.baseline` — known-good fingerprints so existing
+  *intentional* patterns are suppressed and CI fails only on NEW
+  findings.
+* :mod:`repro.analysis.cli` — the ``repro-lint`` entry point.
+
+Runtime side:
+
+* :mod:`repro.analysis.witness` — drop-in instrumented
+  ``threading.Lock``/``Condition`` wrappers (enabled via the
+  ``--lock-witness`` pytest flag) that record ACTUAL acquisition orders
+  during the tier-1 concurrency tests and cross-check them against the
+  static lock-order graph: observed cycles are hard failures, static
+  edges never observed are reported as possibly stale.
+"""
+
+from repro.analysis.baseline import Baseline, Finding, fingerprint
+from repro.analysis.callgraph import Package
+from repro.analysis.cli import run_analysis
+from repro.analysis.lockorder import LockOrderGraph
+
+__all__ = ["Baseline", "Finding", "fingerprint", "Package",
+           "run_analysis", "LockOrderGraph"]

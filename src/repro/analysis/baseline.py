@@ -1,0 +1,93 @@
+"""Findings, stable fingerprints, and the known-good baseline.
+
+A finding's fingerprint deliberately excludes the line number: the
+baseline must survive unrelated edits shifting code around.  It hashes
+``check | file | function | detail`` — moving an intentional pattern to
+a different function (or changing what it does) re-surfaces it, which is
+what we want.
+
+The baseline file is JSON, human-edited, with one **justification** per
+suppressed finding — review-time documentation of *why* the pattern is
+intentional.  Stale entries (fingerprints no longer produced) are
+reported as warnings so the file shrinks as fixes land.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class Finding:
+    check: str              # lock-order-cycle | blocking-under-lock | ...
+    file: str               # repo-relative path
+    function: str           # qualname (or "-" for package-level findings)
+    line: int
+    detail: str             # stable, human-readable description
+    chain: Tuple[str, ...] = ()  # call chain, for propagated findings
+
+    def format(self) -> str:
+        loc = f"{self.file}:{self.line}"
+        out = f"[{self.check}] {loc} {self.function}: {self.detail}"
+        if self.chain:
+            out += "\n    via " + " -> ".join(self.chain)
+        return out
+
+    def to_dict(self) -> dict:
+        return {"check": self.check, "file": self.file,
+                "function": self.function, "line": self.line,
+                "detail": self.detail, "chain": list(self.chain),
+                "fingerprint": fingerprint(self)}
+
+
+def fingerprint(f: Finding) -> str:
+    key = "|".join((f.check, f.file, f.function, f.detail))
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+@dataclass
+class Baseline:
+    entries: Dict[str, str] = field(default_factory=dict)  # fp -> why
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text())
+        entries = {e["fingerprint"]: e.get("justification", "")
+                   for e in data.get("suppressions", [])}
+        return cls(entries=entries)
+
+    def save(self, path: Path, findings: List[Finding],
+             justifications: Dict[str, str] | None = None):
+        justifications = justifications or {}
+        sup = []
+        for f in sorted(findings, key=lambda x: (x.check, x.file, x.line)):
+            fp = fingerprint(f)
+            sup.append({
+                "fingerprint": fp,
+                "check": f.check,
+                "file": f.file,
+                "function": f.function,
+                "detail": f.detail,
+                "justification": justifications.get(
+                    fp, self.entries.get(fp, "TODO: justify or fix")),
+            })
+        path.write_text(json.dumps({"suppressions": sup}, indent=2) + "\n")
+
+    def split(self, findings: List[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[str]]:
+        """(new, suppressed, stale_fingerprints)."""
+        new: List[Finding] = []
+        suppressed: List[Finding] = []
+        seen = set()
+        for f in findings:
+            fp = fingerprint(f)
+            seen.add(fp)
+            (suppressed if fp in self.entries else new).append(f)
+        stale = sorted(fp for fp in self.entries if fp not in seen)
+        return new, suppressed, stale

@@ -1,0 +1,130 @@
+"""``repro-lint`` — the concurrency-lint entry point.
+
+Stdlib only: the CI job that runs this needs no numpy/jax install (the
+``src/repro`` tree is parsed, never imported).
+
+Exit codes: 0 clean (or everything baselined), 1 new findings, 2 usage
+error.
+
+Typical invocations::
+
+    repro-lint                                  # lint src/repro
+    repro-lint --baseline analysis_baseline.json
+    repro-lint --baseline analysis_baseline.json --write-baseline
+    repro-lint --report lint-report.json        # CI artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.baseline import Baseline, Finding
+from repro.analysis.callgraph import Package
+from repro.analysis.checks import run_checks
+from repro.analysis.lockorder import LockOrderGraph, build_lock_order
+from repro.analysis.locks import LockTable, collect_locks
+
+DEFAULT_ROOT = Path(__file__).resolve().parents[1]   # src/repro
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    new: List[Finding]
+    suppressed: List[Finding]
+    stale: List[str]
+    pkg: Package = field(repr=False, default=None)
+    table: LockTable = field(repr=False, default=None)
+    graph: LockOrderGraph = field(repr=False, default=None)
+
+    def to_dict(self) -> dict:
+        return {
+            "summary": {
+                "total": len(self.findings),
+                "new": len(self.new),
+                "suppressed": len(self.suppressed),
+                "stale_baseline_entries": len(self.stale),
+            },
+            "new": [f.to_dict() for f in self.new],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "stale": self.stale,
+            "lock_order_edges": sorted(
+                f"{o} -> {i}" for o, i in self.graph.pairs()),
+            "locks": {
+                ident: {"kind": d.kind, "file": d.file, "line": d.line}
+                for ident, d in sorted(self.table.defs.items())
+            },
+        }
+
+
+def run_analysis(roots: Optional[List[Path]] = None,
+                 baseline_path: Optional[Path] = None,
+                 include_analysis: bool = False) -> Report:
+    roots = roots or [DEFAULT_ROOT]
+    exclude = () if include_analysis else ("analysis",)
+    pkg = Package.load(roots, exclude_parts=exclude)
+    table = collect_locks(pkg)
+    graph = build_lock_order(pkg, table)
+    findings = run_checks(pkg, table, graph)
+    baseline = Baseline.load(baseline_path) if baseline_path else Baseline()
+    new, suppressed, stale = baseline.split(findings)
+    return Report(findings=findings, new=new, suppressed=suppressed,
+                  stale=stale, pkg=pkg, table=table, graph=graph)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Concurrency lint for the startup stack "
+                    "(lock order, blocking-under-lock, leaks).")
+    ap.add_argument("--root", action="append", type=Path, default=None,
+                    help="source root(s) to lint (default: src/repro)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="known-good baseline JSON; only NEW findings fail")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping existing justifications")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the full JSON report here (CI artifact)")
+    ap.add_argument("--include-analysis", action="store_true",
+                    help="also lint repro/analysis itself")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print suppressed findings")
+    args = ap.parse_args(argv)
+
+    rep = run_analysis(roots=args.root, baseline_path=args.baseline,
+                       include_analysis=args.include_analysis)
+
+    if args.report:
+        args.report.write_text(json.dumps(rep.to_dict(), indent=2) + "\n")
+    if args.write_baseline:
+        if args.baseline is None:
+            print("--write-baseline requires --baseline", file=sys.stderr)
+            return 2
+        Baseline.load(args.baseline).save(args.baseline, rep.findings)
+        print(f"baseline rewritten: {len(rep.findings)} suppression(s) "
+              f"-> {args.baseline}")
+        return 0
+
+    print(f"repro-lint: {len(rep.findings)} finding(s), "
+          f"{len(rep.suppressed)} baselined, {len(rep.new)} new; "
+          f"{len(rep.graph.pairs())} lock-order edge(s), "
+          f"{len(rep.table.defs)} lock(s)")
+    for f in rep.new:
+        print("NEW " + f.format())
+    if args.verbose:
+        for f in rep.suppressed:
+            print("baselined " + f.format())
+    for fp in rep.stale:
+        print(f"warning: stale baseline entry {fp} (finding no longer "
+              f"produced — remove it)")
+    return 1 if rep.new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,10 +117,19 @@ class LazyImageClient:
                 self.stats["peer_fetches"] += 1
                 if self.sched is not None:
                     self.sched.account("peer", priority, len(data))
-                self._store(h, data, job=job)
-                # announce: this client is now a holder too, so the
-                # dissemination tree fans out instead of pinning the seed
-                self.peers.publish(h, self)
+                try:
+                    self._store(h, data, job=job)
+                    # announce: this client is now a holder too, so the
+                    # dissemination tree fans out instead of pinning the
+                    # seed
+                    self.peers.publish(h, self)
+                except BaseException:
+                    # we may still be the fetcher-of-record: a failed
+                    # store/publish must not leave the singleflight
+                    # marker armed or coalesced waiters stall out their
+                    # full wait budget
+                    self.peers.abandon(h, self)
+                    raise
                 return data
             try:
                 # another thread of THIS client may have been the
@@ -151,9 +160,16 @@ class LazyImageClient:
                 self.peers.abandon(h, self)
             raise
         self.stats["registry_fetches"] += 1
-        self._store(h, data, job=job)
-        if self.peers is not None:
-            self.peers.publish(h, self)
+        try:
+            self._store(h, data, job=job)
+            if self.peers is not None:
+                self.peers.publish(h, self)
+        except BaseException:
+            # the registry fetch succeeded but the block never became
+            # servable — clear the marker so a waiter re-arms and retries
+            if self.peers is not None:
+                self.peers.abandon(h, self)
+            raise
         return data
 
     def _store(self, h: str, data: bytes, job: Optional[str] = None) -> bool:

@@ -178,6 +178,11 @@ class Swarm:
         cid = _client_id(client)
         with self._meta:
             self._clients.pop(cid, None)
+            # drop the serve-slot semaphore too — leaving it behind
+            # grows `_sems` by one entry per client identity ever seen
+            # (a rejoin re-creates it in join(); in-progress serves hold
+            # their own reference to the old object)
+            self._sems.pop(cid, None)
         # holder-index entries are pruned lazily on the next failed pick
 
     def announce(self, client, hashes: Iterable[str]):

@@ -125,11 +125,20 @@ class IOScheduler:
         with pool.cond:
             pool.seq += 1
             me = (priority, pool.seq)
-            heapq.heappush(pool.waiting, me)
             waited = False
-            while pool.active >= pool.tokens or pool.waiting[0] != me:
-                waited = True
-                pool.cond.wait()
+            try:
+                heapq.heappush(pool.waiting, me)
+                while pool.active >= pool.tokens or pool.waiting[0] != me:
+                    waited = True
+                    pool.cond.wait()
+            except BaseException:
+                # an interrupted waiter must not wedge the pool: a stale
+                # heap entry at the head blocks every later acquire
+                if me in pool.waiting:
+                    pool.waiting.remove(me)
+                    heapq.heapify(pool.waiting)
+                pool.cond.notify_all()
+                raise
             heapq.heappop(pool.waiting)
             pool.active += 1
             st = pool.stats

@@ -194,7 +194,6 @@ class StripedWriter:
             name = f"stripe_{tag:08d}_{f}"
             self._files.append((group, name))
             self._handles.append(hdfs.open_group_file(group, name, "wb"))
-        self._lock = threading.Lock()
         self._file_len = [0] * self.width          # bytes written per file
         # replicated: mirror handles per data file
         self._replicas: list[list[tuple[int, str]]] = []

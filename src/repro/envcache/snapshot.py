@@ -273,6 +273,9 @@ class EnvCache:
                 self.mount.hdfs.delete(self.mount._full(p))
         with self._flight_master:
             self._meta_cache.pop(key, None)
+            # retire the key's flight lock too: without this the
+            # per-key map grows for every job key ever restored
+            self._in_flight.pop(key, None)
         if self._local is not None:
             self._local.invalidate_prefix(f"{key}.")
 
@@ -442,6 +445,11 @@ class EnvCache:
                         self.mount.open(self._meta_path(key)).read())
                     with self._flight_master:
                         self._meta_cache[key] = meta
+            # meta is cached now: future restores take the fast path, so
+            # the flight lock has done its job — stragglers already
+            # blocked on the old lock object re-check the cache under it
+            with self._flight_master:
+                self._in_flight.pop(key, None)
         packed = self._open_archive(key, meta, priority)
         try:
             try:

@@ -273,35 +273,41 @@ class NodeCache:
         concurrent admits could each see a cache with room and
         collectively blow the byte bound."""
         p = self.path(key)
-        with self._lock:
-            present = key in self._sizes
-            if not present:
-                evicted = self._make_room(len(data))
-                self._index(key, len(data))
-                self._inflight_writes.add(key)
-            else:
-                evicted = []
-                self.policy.on_access(key)
-        self._notify_evicted(evicted)
-        if present:
-            if job is not None:
-                self.pin(job, key)
-            return False
         tmp = p.with_name(p.name + f".tmp{threading.get_ident():x}")
+        reserved = False
         try:
+            with self._lock:
+                present = key in self._sizes
+                if not present:
+                    evicted = self._make_room(len(data))
+                    self._index(key, len(data))
+                    self._inflight_writes.add(key)
+                    reserved = True
+                else:
+                    evicted = []
+                    self.policy.on_access(key)
+            # inside the try: a raising eviction subscriber must roll the
+            # reservation back, not leak the index entry + write marker
+            self._notify_evicted(evicted)
+            if present:
+                if job is not None:
+                    self.pin(job, key)
+                return False
             tmp.write_bytes(data)
             os.link(tmp, p)        # atomic publish; loser keeps p intact
             stored = True
         except FileExistsError:
             stored = False         # concurrent writer won; bytes identical
         except BaseException:
-            with self._lock:
-                self._deindex(key)
+            if reserved:
+                with self._lock:
+                    self._deindex(key)
             raise
         finally:
-            tmp.unlink(missing_ok=True)
-            with self._lock:
-                self._inflight_writes.discard(key)
+            if reserved:
+                tmp.unlink(missing_ok=True)
+                with self._lock:
+                    self._inflight_writes.discard(key)
         if job is not None:
             self.pin(job, key)
         return stored
@@ -311,15 +317,17 @@ class NodeCache:
         """Admit an already-written temp file (streamed producers: env
         archives) by renaming it into the cache.  Returns the entry path."""
         nbytes = Path(tmp_path).stat().st_size
-        with self._lock:
-            reserved = key not in self._sizes
-            evicted = self._make_room(nbytes if reserved else 0)
-            if reserved:
-                self._index(key, nbytes)
-                self._inflight_writes.add(key)
-        self._notify_evicted(evicted)
         dest = self.path(key)
+        reserved = False
         try:
+            with self._lock:
+                fresh = key not in self._sizes
+                evicted = self._make_room(nbytes if fresh else 0)
+                if fresh:
+                    self._index(key, nbytes)
+                    self._inflight_writes.add(key)
+                    reserved = True
+            self._notify_evicted(evicted)
             Path(tmp_path).replace(dest)
         except BaseException:
             if reserved:
@@ -327,8 +335,9 @@ class NodeCache:
                     self._deindex(key)
             raise
         finally:
-            with self._lock:
-                self._inflight_writes.discard(key)
+            if reserved:
+                with self._lock:
+                    self._inflight_writes.discard(key)
         if job is not None:
             self.pin(job, key)
         return dest
@@ -338,6 +347,15 @@ class NodeCache:
     def _flight_lock(self, key: str) -> threading.Lock:
         with self._lock:
             return self._flights.setdefault(key, threading.Lock())
+
+    def _retire_flight(self, key: str) -> None:
+        """Drop the flight entry once ``key`` is admitted: future callers
+        take the ``has()`` fast path before ever reaching the flight
+        lock, and stragglers already blocked on the old lock object
+        re-check ``has()`` after acquiring it.  Keeps ``_flights``
+        bounded by in-progress fetches instead of every key ever seen."""
+        with self._lock:
+            self._flights.pop(key, None)
 
     def fetch_path(self, key: str, producer: Callable[[Path], None], *,
                    job: Optional[str] = None) -> Tuple[Path, bool]:
@@ -361,6 +379,7 @@ class NodeCache:
                     self.stats["singleflight_hits"] += 1
                 if job is not None:
                     self.pin(job, key)
+                self._retire_flight(key)
                 return self.path(key), True
             with self._lock:
                 self.stats["misses"] += 1
@@ -368,9 +387,11 @@ class NodeCache:
                 self.path(key).name + f".tmp{os.getpid():x}")
             try:
                 producer(tmp)
-                return self.admit_file(key, tmp, job=job), False
+                dest = self.admit_file(key, tmp, job=job)
             finally:
                 tmp.unlink(missing_ok=True)
+        self._retire_flight(key)
+        return dest, False
 
     def get_or_fetch(self, key: str, fetch: Callable[[], bytes], *,
                      job: Optional[str] = None) -> bytes:
@@ -389,13 +410,15 @@ class NodeCache:
                     self.stats["singleflight_hits"] += 1
                 if job is not None:
                     self.pin(job, key)
+                self._retire_flight(key)
                 return data
             except FileNotFoundError:
                 with self._lock:
                     self.stats["misses"] += 1
             data = fetch()
             self.put(key, data, job=job)
-            return data
+        self._retire_flight(key)
+        return data
 
     # ----- invalidation -------------------------------------------------
 

@@ -2,6 +2,48 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--lock-witness", action="store_true", default=False,
+        help="instrument threading locks constructed in src/repro and "
+             "cross-check observed acquisition orders against the static "
+             "lock-order graph (repro-lint) at session end")
+
+
+def pytest_configure(config):
+    if config.getoption("--lock-witness"):
+        from repro.analysis import witness
+        witness.install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    config = session.config
+    if not config.getoption("--lock-witness"):
+        return
+    from repro.analysis import witness
+    witness.uninstall()
+    report = witness.cross_check()
+    tr = config.pluginmanager.get_plugin("terminalreporter")
+    out = tr.write_line if tr is not None else print
+    out("")
+    out(f"[lock-witness] {report['locks_witnessed']} lock site(s) "
+        f"witnessed, {len(report['observed_edges'])} observed "
+        f"edge(s)")
+    for e in report["static_gap"]:
+        out(f"[lock-witness] static gap (observed, not predicted): {e}")
+    for e in report["possibly_stale"]:
+        out(f"[lock-witness] possibly stale (predicted, never "
+            f"observed): {e}")
+    for s in report["same_site_nesting"]:
+        out(f"[lock-witness] same-site nesting (per-key locks from one "
+            f"site nested; order discipline unverifiable): {s}")
+    if report["cycles"]:
+        for cyc in report["cycles"]:
+            out(f"[lock-witness] OBSERVED LOCK-ORDER CYCLE: "
+                f"{' -> '.join(cyc + [cyc[0]])}")
+        session.exitstatus = 1
+
+
 @pytest.fixture(scope="session")
 def rules():
     """Single-device (1,1) mesh with the production axis names."""

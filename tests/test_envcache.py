@@ -265,3 +265,39 @@ class TestRestoreHotPath:
         with _pytest.raises(tarfile.TarError):
             cache.restore(key, tmp_path / "out")
         assert not (tmp_path / "evil.py").exists()
+
+
+class TestFlightHygiene:
+    """Regression (repro-lint unbounded-lock-container): the per-key
+    restore flight-lock map must stay bounded — retired after the meta
+    read lands in the cache, and dropped on expire()."""
+
+    def test_in_flight_retired_after_restore(self, mount, tmp_path):
+        cache = EnvCache(mount)
+        t0 = tmp_path / "a"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        key = job_cache_key({"v": 1})
+        cache.create(key, t0, before)
+        # cold restore takes the singleflight meta read
+        cache._meta_cache.clear()
+        t1 = tmp_path / "b"
+        assert cache.restore(key, t1) is not None
+        assert cache._in_flight == {}, \
+            "restore flight lock kept after the meta read"
+
+    def test_expire_drops_flight_entry(self, mount, tmp_path):
+        cache = EnvCache(mount)
+        t0 = tmp_path / "a"
+        t0.mkdir()
+        before = snapshot_dir(t0)
+        _install(t0)
+        key = job_cache_key({"v": 2})
+        cache.create(key, t0, before)
+        # simulate an in-progress flight entry left behind
+        cache._key_lock(key)
+        assert key in cache._in_flight
+        cache.expire(key)
+        assert key not in cache._in_flight
+        assert cache.restore(key, tmp_path / "b") is None

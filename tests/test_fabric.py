@@ -601,3 +601,60 @@ class TestHotScoreWiring:
         for k in ("coldkey", "deadbeef", "cafebabe"):
             policy.on_admit(k)
         assert next(iter(policy.victims())) == "coldkey"
+
+
+class TestReservationRollback:
+    """Regressions (repro-lint leak-on-raise + unbounded-lock-container):
+    the index reservation + in-flight write marker must roll back when
+    anything between the reservation and the publish raises, and the
+    per-key flight-lock map must not grow without bound."""
+
+    def test_put_rolls_back_when_notify_raises(self, tmp_path):
+        cache = NodeCache(tmp_path, capacity_bytes=3000)
+
+        def explode(evicted):
+            raise RuntimeError("eviction subscriber blew up")
+
+        cache._notify_evicted = explode
+        with pytest.raises(RuntimeError):
+            cache.put("k", b"x" * 100)
+        del cache.__dict__["_notify_evicted"]
+        assert not cache.has("k"), "index reservation leaked"
+        assert "k" not in cache._inflight_writes, "write marker leaked"
+        # the cache still admits normally afterwards
+        assert cache.put("k", b"x" * 100) is True
+        assert cache.read("k") == b"x" * 100
+
+    def test_admit_file_rolls_back_when_notify_raises(self, tmp_path):
+        cache = NodeCache(tmp_path / "c", capacity_bytes=3000)
+
+        def explode(evicted):
+            raise RuntimeError("eviction subscriber blew up")
+
+        src = tmp_path / "payload.tmp"
+        src.write_bytes(b"y" * 64)
+        cache._notify_evicted = explode
+        with pytest.raises(RuntimeError):
+            cache.admit_file("k", src)
+        del cache.__dict__["_notify_evicted"]
+        assert not cache.has("k")
+        assert "k" not in cache._inflight_writes
+        src.write_bytes(b"y" * 64)  # first attempt may have consumed it
+        assert cache.admit_file("k", src).exists()
+
+    def test_flight_locks_retired_after_singleflight(self, tmp_path):
+        cache = NodeCache(tmp_path)
+        path, hit = cache.fetch_path(
+            "a", lambda tmp: tmp.write_bytes(b"data"))
+        assert not hit and path.exists()
+        assert cache._flights == {}, "flight entry kept after admission"
+        # the singleflight-hit path retires too
+        cache.fetch_path("a", lambda tmp: tmp.write_bytes(b"data"))
+        assert cache._flights == {}
+        cache.get_or_fetch("b", lambda: b"zz")
+        assert cache._flights == {}
+        # a failed producer KEEPS the flight so waiters retry under it
+        with pytest.raises(RuntimeError):
+            cache.fetch_path("c", lambda tmp: (_ for _ in ()).throw(
+                RuntimeError("producer died")))
+        assert "c" in cache._flights

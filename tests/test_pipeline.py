@@ -377,3 +377,35 @@ def test_hot_update_shares_dag(tmp_path):
     spans = rt.analysis.task_spans("hu#h1")
     assert set(spans) == {"node000", "node001"}
     assert StartupTask.ENV_RESTORE in spans["node000"]
+
+
+class TestSlotInterruptSafety:
+    """Regression (repro-lint leak-on-raise): a waiter interrupted inside
+    slot() must not leave its heap entry behind — a stale head entry
+    blocks every later acquire and wedges the pool forever."""
+
+    def test_interrupted_waiter_does_not_wedge_pool(self):
+        sched = IOScheduler(tokens={"x": 1})
+        pool = sched._pool("x")
+        # the witness wrapper delegates through ._real; patch whichever
+        # object actually implements wait()
+        cond_impl = getattr(pool.cond, "_real", pool.cond)
+
+        def boom(timeout=None):
+            raise RuntimeError("interrupted while waiting")
+
+        with sched.slot("x"):
+            cond_impl.wait = boom
+            try:
+                with pytest.raises(RuntimeError):
+                    with sched.slot("x"):
+                        pass
+            finally:
+                del cond_impl.wait
+            assert pool.waiting == [], \
+                "interrupted waiter left a stale heap entry"
+        # the pool still grants tokens afterwards
+        with sched.slot("x"):
+            assert pool.active == 1
+        assert pool.active == 0
+        assert pool.waiting == []

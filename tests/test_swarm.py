@@ -514,3 +514,46 @@ class TestVanishedBlocks:
             if not cache.has(h):
                 assert swarm.holder_count(h) == 0, \
                     f"evicted block {h[:8]} still advertised"
+
+
+class TestMembershipHygiene:
+    """Regressions (repro-lint unbounded-lock-container + singleflight
+    marker leak): leave() must retire per-client serve semaphores, and a
+    fetcher whose local store/publish fails must clear its in-flight
+    marker so a waiter can re-arm."""
+
+    def test_leave_retires_serve_semaphore(self, image_env, tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        c = LazyImageClient(man, reg, tmp_path / "m0", node_id="m0",
+                            peers=swarm)
+        assert c.client_id in swarm._sems
+        swarm.leave(c)
+        assert c.client_id not in swarm._sems, \
+            "serve semaphore kept for a departed client"
+        assert c.client_id not in swarm._clients
+        # a warm rejoin re-creates it
+        swarm.join(c, replace=True)
+        assert c.client_id in swarm._sems
+
+    def test_failed_store_clears_fetcher_marker(self, image_env,
+                                                tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        c = LazyImageClient(man, reg, tmp_path / "s0", node_id="s0",
+                            peers=swarm)
+        h = man.file_map()["app.bin"].blocks[0]
+
+        def bad_put(key, data, job=None):
+            raise OSError("disk full")
+
+        c.cache.put = bad_put
+        with pytest.raises(OSError):
+            c.ensure_block(h)
+        sh = swarm._shard(h)
+        assert h not in sh.inflight, \
+            "failed store left the singleflight marker armed"
+        # with the disk healthy again the fetch goes straight through
+        del c.cache.__dict__["put"]
+        assert c.ensure_block(h)
+        assert h in sh.holders
