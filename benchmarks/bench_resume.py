@@ -1,12 +1,19 @@
 """§4.4 resume benchmark — planned sharding-aware restore vs naive
-full-checkpoint restore, across 1–32 simulated hosts.
+full-checkpoint restore across 1–32 simulated hosts, plus the
+continuous-recovery crash-restore cell (restore-ahead prefetch and
+incremental delta chains).
 
 A tensor-parallel-style checkpoint (row- and column-sharded matrices plus
 replicated smalls) is saved striped; per host count N, every rank builds
 its PartitionSpec-derived restore plan and executes it with batched
-``pread_many`` reads.  Reports counted DFS bytes (HdfsCluster read
-accounting — deterministic, unlike wall clock on shared CI boxes) and
-wall time, and optionally writes a JSON artifact for CI upload.
+``pread_many`` reads.  The crash-restore cell then compares a cold
+restart (all DFS preads) against a restore-ahead warm restart (wave-0
+ranges staged in a fabric ``NodeCache``) and a delta-chain resume
+(hash-verified byte-identical to the equivalent full snapshot).  Reports
+counted DFS bytes (HdfsCluster read accounting — deterministic, unlike
+wall clock on shared CI boxes) and wall time, and optionally writes a
+JSON artifact for CI upload.  ``--max-ratio`` gates warm-restart DFS
+bytes as a fraction of the cold restart's (exit 2 on regression).
 
     PYTHONPATH=src python benchmarks/bench_resume.py --json bench.json
 """
@@ -14,7 +21,9 @@ wall time, and optionally writes a JSON artifact for CI upload.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
+import sys
 import tempfile
 import time
 from pathlib import Path
@@ -25,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 from repro.ckpt.checkpoint import Checkpointer
 from repro.ckpt.plan import execute_plan
 from repro.dfs.hdfs import HdfsCluster
+from repro.fabric.cache import CachedRangeReader, NodeCache, prefetch_ranges
 
 try:
     from benchmarks.common import emit
@@ -49,7 +59,101 @@ SPECS = ({"w_in": P(None, "model"), "w_out": P("model", None),
           "scale": P("model")},)
 
 
-def run(hosts=(1, 2, 4, 8, 16, 32), mb: int = 32, json_path=None):
+def crash_restore(mb: int = 32) -> dict:
+    """Continuous-recovery cell: cold vs restore-ahead vs delta-chain.
+
+    Saves a full snapshot, runs a sparse-update workload (two delta saves
+    touching ~10% of the rows), verifies the delta-chain restore is
+    byte-identical to an equivalent full snapshot, then measures the DFS
+    bytes of a cold wave-0 restore vs one whose plan ranges were staged
+    into a ``NodeCache`` by restore-ahead prefetch.
+    """
+    with tempfile.TemporaryDirectory() as d:
+        hdfs = HdfsCluster(Path(d) / "h", num_groups=8,
+                           block_size=1 << 20)
+        ck = Checkpointer(hdfs, striped=True, width=8)
+        params = _params(mb)
+        opt = {k: np.zeros_like(v) for k, v in params.items()}
+
+        hdfs.reset_counters()
+        ck.save(1, params, opt)
+        full_write = hdfs.write_bytes
+
+        # sparse-update workload: each "step" touches ~10% of the rows
+        # of every matrix (optimizer moments move with them)
+        delta_writes = []
+        state_p = {k: v.copy() for k, v in params.items()}
+        state_o = {k: v.copy() for k, v in opt.items()}
+        rng = np.random.default_rng(1)
+        for step in (2, 3):
+            for k in ("w_in", "w_out"):
+                n = state_p[k].shape[0] // 10
+                lo = rng.integers(0, state_p[k].shape[0] - n)
+                state_p[k][lo:lo + n] += 0.1
+                state_o[k][lo:lo + n] += 0.01
+            hdfs.reset_counters()
+            idx = ck.save_delta(step, state_p, state_o)
+            delta_writes.append(
+                {"step": step, "write_bytes": hdfs.write_bytes,
+                 "payload_bytes": idx.delta["data_bytes"]})
+
+        # byte-identity: the composed chain must equal a full snapshot of
+        # the same state
+        ck.save(9, state_p, state_o)
+        total = ck.load_index(3).total_bytes
+        h_chain = hashlib.sha256(ck._reader(3).pread(0, total)).hexdigest()
+        h_full = hashlib.sha256(ck._reader(9).pread(0, total)).hexdigest()
+        if h_chain != h_full:
+            raise AssertionError(
+                "delta-chain restore is not byte-identical to the "
+                f"equivalent full snapshot ({h_chain[:12]} != "
+                f"{h_full[:12]})")
+
+        index, plans = ck.plan_restore(3, params, opt)
+        wave0 = [(op.offset, op.length) for op in plans[0].reads]
+        wave0_bytes = sum(ln for _, ln in wave0)
+
+        # cold restart: every wave-0 byte is a DFS pread
+        reader = ck._reader(3)
+        hdfs.reset_counters()
+        t0 = time.perf_counter()
+        execute_plan(reader, plans[0])
+        cold_s = time.perf_counter() - t0
+        cold_dfs = hdfs.read_bytes
+
+        # restore-ahead: stage the wave-0 ranges, then replay the SAME
+        # plan through the cache-consulting reader
+        cache = NodeCache(Path(d) / "cache")
+        stream = f"ckpt:{ck.base}/step_{3:08d}"
+        staged = prefetch_ranges(ck._reader(3), cache, stream, wave0,
+                                 job="restore-ahead/bench")
+        warm_reader = CachedRangeReader(ck._reader(3), cache, stream)
+        hdfs.reset_counters()
+        t0 = time.perf_counter()
+        execute_plan(warm_reader, plans[0])
+        warm_s = time.perf_counter() - t0
+        warm_dfs = hdfs.read_bytes
+        hit_fraction = (warm_reader.cache_stats["hit_bytes"]
+                        / max(wave0_bytes, 1))
+
+    return {
+        "total_bytes": total,
+        "wave0_bytes": wave0_bytes,
+        "full_write_bytes": full_write,
+        "delta_saves": delta_writes,
+        "chain_byte_identical": True,
+        "prefetch_staged_bytes": staged,
+        "cold_dfs_bytes": cold_dfs,
+        "warm_dfs_bytes": warm_dfs,
+        "warm_hit_fraction": round(hit_fraction, 4),
+        "warm_vs_cold_dfs_ratio": round(warm_dfs / max(cold_dfs, 1), 4),
+        "cold_s": round(cold_s, 4),
+        "warm_s": round(warm_s, 4),
+    }
+
+
+def run(hosts=(1, 2, 4, 8, 16, 32), mb: int = 32, json_path=None,
+        max_ratio=None):
     rows = []
     report = {"mb": mb, "hosts": []}
     with tempfile.TemporaryDirectory() as d:
@@ -95,9 +199,26 @@ def run(hosts=(1, 2, 4, 8, 16, 32), mb: int = 32, json_path=None):
                 round(per_host / 2**20, 2),
                 f"naive {naive_bytes / 2**20:.1f} MiB "
                 f"(x{naive_bytes / max(per_host, 1):.1f} less I/O)"))
+    cr = crash_restore(mb)
+    report["crash_restore"] = cr
+    worst_delta = max(d["payload_bytes"] for d in cr["delta_saves"])
+    rows.append(("resume.crash.warm_vs_cold_dfs_ratio",
+                 cr["warm_vs_cold_dfs_ratio"],
+                 f"hit {cr['warm_hit_fraction']:.0%} of wave-0 from "
+                 "NodeCache"))
+    rows.append(("resume.crash.delta_payload_MiB",
+                 round(worst_delta / 2**20, 2),
+                 f"full snapshot {cr['full_write_bytes'] / 2**20:.1f} MiB "
+                 "written; chain hash-verified"))
     if json_path:
         Path(json_path).write_text(json.dumps(report, indent=2))
     emit(rows, f"Sharding-aware resume ({mb} MiB ckpt, hosts {list(hosts)})")
+    if max_ratio is not None and \
+            cr["warm_vs_cold_dfs_ratio"] > max_ratio:
+        print(f"REGRESSION: restore-ahead warm restart read "
+              f"{cr['warm_vs_cold_dfs_ratio']:.2f}x of the cold restart's "
+              f"DFS bytes (gate: {max_ratio})")
+        sys.exit(2)
     return report
 
 
@@ -107,9 +228,12 @@ def main():
     ap.add_argument("--hosts", type=int, nargs="*",
                     default=[1, 2, 4, 8, 16, 32])
     ap.add_argument("--json", default="")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail (exit 2) if warm-restart DFS bytes exceed "
+                         "this fraction of the cold restart's")
     args = ap.parse_args()
     run(hosts=tuple(args.hosts), mb=args.mb,
-        json_path=args.json or None)
+        json_path=args.json or None, max_ratio=args.max_ratio)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
 from repro.ckpt.checkpoint import Checkpointer  # noqa: F401
+from repro.ckpt.delta import (DEFAULT_DIFF_CHUNK, LayeredReader,  # noqa: F401
+                              build_layer_map, changed_ranges, chunk_crcs)
 from repro.ckpt.index import TensorIndex, TensorEntry  # noqa: F401
 from repro.ckpt.plan import (RestorePlan, ReadOp, Segment,  # noqa: F401
                              TensorPlan, build_restore_plan,

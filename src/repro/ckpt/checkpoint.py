@@ -13,6 +13,14 @@ per-tensor buffers).  This keeps resume cost proportional to
 waves: wave 0 is the first tree (params), wave 1 the remaining trees
 (optimizer state), which ``async_tail=True`` streams on a background thread
 so the caller can overlap it with model init.
+
+Incremental delta checkpoints (repro.ckpt.delta): ``save_delta`` writes
+only the byte ranges that changed since a base snapshot (chunked CRC diff
+against the base manifest's hashes — the base data is never re-read), and
+restore composes the base + delta chain into one layered reader so a
+resume reads each logical range exactly once from the newest layer that
+holds it.  The planner, waves and ``pread_many`` batching are identical
+for full and delta steps.
 """
 
 from __future__ import annotations
@@ -23,9 +31,12 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.ckpt.delta import (DEFAULT_DIFF_CHUNK, LayeredReader,
+                              build_layer_map, changed_ranges, chunk_crcs)
 from repro.ckpt.index import TensorIndex
 from repro.ckpt.plan import (RestorePlan, build_restore_plan,
                              dim_slices_for_spec, execute_plan)
+from repro.core.pipeline import CRITICAL, DEFERRED
 from repro.dfs.hdfs import HdfsCluster
 from repro.dfs.striped import StripedReader, StripedWriter
 
@@ -49,11 +60,16 @@ def _flat_specs(spec_tree: Any) -> list[tuple[str, Any]]:
 
 class _PlainReader:
     """Range reads over a non-striped checkpoint file, with the same
-    ``pread``/``pread_many`` contract as ``StripedReader``."""
+    ``pread``/``pread_many`` contract as ``StripedReader`` — including
+    scheduler metering: with ``sched`` attached, a batch holds one "dfs"
+    token at its (per-call overridable) priority for the duration."""
 
-    def __init__(self, hdfs: HdfsCluster, path: str):
+    def __init__(self, hdfs: HdfsCluster, path: str, *, sched=None,
+                 priority: int = 0):
         self._hdfs = hdfs
         self._path = path
+        self.sched = sched
+        self.priority = priority
         # signature parity with StripedReader: no placement, no degraded
         # reads — counters stay zero
         self.stats = {"degraded_reads": 0, "reconstructed_bytes": 0,
@@ -64,6 +80,11 @@ class _PlainReader:
 
     def pread_many(self, ranges, into=None, priority=None):
         from repro.dfs.striped import pread_many_fallback
+        prio = self.priority if priority is None else priority
+        if self.sched is not None:
+            nbytes = sum(ln for _, ln in ranges)
+            with self.sched.slot("dfs", priority=prio, nbytes=nbytes):
+                return pread_many_fallback(self.pread, ranges, into=into)
         return pread_many_fallback(self.pread, ranges, into=into)
 
 
@@ -78,7 +99,8 @@ class Checkpointer:
     def __init__(self, hdfs: HdfsCluster, base: str = "/ckpt", *,
                  striped: bool = True, width: int = 8, threads: int = 8,
                  placement=None, chunk: Optional[int] = None,
-                 stripe: Optional[int] = None):
+                 stripe: Optional[int] = None,
+                 diff_chunk: int = DEFAULT_DIFF_CHUNK):
         from repro.dfs.striped import CHUNK, STRIPE
         self.hdfs = hdfs
         self.base = base.rstrip("/")
@@ -91,20 +113,41 @@ class Checkpointer:
         # pick the geometry up from the file attrs, no knob needed there)
         self.chunk = chunk or CHUNK
         self.stripe = stripe or STRIPE
+        # granularity of the save_delta CRC diff; every full save records
+        # per-tensor chunk hashes at this size so it can serve as a base
+        self.diff_chunk = diff_chunk
 
     # ----- paths -----
 
     def data_path(self, step: int) -> str:
         return f"{self.base}/step_{step:08d}.data"
 
+    def delta_data_path(self, step: int) -> str:
+        return f"{self.base}/step_{step:08d}.delta"
+
     def index_path(self, step: int) -> str:
         return f"{self.base}/step_{step:08d}.index.json"
 
     def steps(self) -> list[int]:
+        """Restorable steps, ascending.  A manifest only counts when its
+        ``step_NNN`` stem parses AND its data file (``.data``, or
+        ``.delta`` for delta steps) exists — foreign ``*.index.json``
+        files no longer crash the listing, and a torn save (index written,
+        data missing / garbage-collected) is not advertised as a resume
+        candidate."""
         out = []
         for p in self.hdfs.listdir(self.base):
-            if p.endswith(".index.json"):
-                out.append(int(p.split("step_")[1].split(".")[0]))
+            name = p.rsplit("/", 1)[-1]
+            if not (name.startswith("step_")
+                    and name.endswith(".index.json")):
+                continue
+            stem = name[len("step_"):-len(".index.json")]
+            if not stem.isdigit():
+                continue
+            step = int(stem)
+            if (self.hdfs.exists(self.data_path(step))
+                    or self.hdfs.exists(self.delta_data_path(step))):
+                out.append(step)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -113,29 +156,101 @@ class Checkpointer:
 
     # ----- save -----
 
-    def save(self, step: int, *trees: Any, meta: Optional[dict] = None) -> TensorIndex:
+    def _index_trees(self, step: int, trees: tuple,
+                     meta: Optional[dict]) -> tuple[TensorIndex,
+                                                    list[bytes]]:
+        """Build the manifest for ``trees`` (chunk hashes included) and
+        return it with the per-tensor payloads in stream order."""
         index = TensorIndex(meta=dict(meta or {}, step=step,
                                       n_trees=len(trees)))
-        arrays: list[np.ndarray] = []
+        index.hash_chunk = self.diff_chunk
+        payloads: list[bytes] = []
         for ti, tree in enumerate(trees):
             for name, leaf in _flat_with_names(tree):
                 arr = np.asarray(leaf)
                 if arr.dtype == jax.numpy.bfloat16:
                     arr = arr.view(np.uint16)  # store bf16 bit pattern
-                    index.add(f"t{ti}{name}#bf16", arr.dtype, arr.shape)
+                    e = index.add(f"t{ti}{name}#bf16", arr.dtype, arr.shape)
                 else:
-                    index.add(f"t{ti}{name}", arr.dtype, arr.shape)
-                arrays.append(arr)
+                    e = index.add(f"t{ti}{name}", arr.dtype, arr.shape)
+                data = arr.tobytes()
+                index.chunk_hashes[e.name] = chunk_crcs(data, self.diff_chunk)
+                payloads.append(data)
+        return index, payloads
+
+    def _write_stream(self, path: str, blobs: list[bytes]):
+        if not any(len(b) for b in blobs):
+            # empty stream (e.g. a no-op delta): plain zero-byte file —
+            # the striped layout has no zero-size geometry
+            self.hdfs.write(path, b"")
+            return
         if self.striped:
-            with StripedWriter(self.hdfs, self.data_path(step),
-                               width=self.width, threads=self.threads,
+            with StripedWriter(self.hdfs, path, width=self.width,
+                               threads=self.threads,
                                placement=self.placement, chunk=self.chunk,
                                stripe=self.stripe) as w:
-                for arr in arrays:
-                    w.write(arr.tobytes())
+                for blob in blobs:
+                    w.write(blob)
         else:
-            self.hdfs.write(self.data_path(step),
-                            b"".join(a.tobytes() for a in arrays))
+            self.hdfs.write(path, b"".join(blobs))
+
+    def save(self, step: int, *trees: Any, meta: Optional[dict] = None) -> TensorIndex:
+        index, payloads = self._index_trees(step, trees, meta)
+        self._write_stream(self.data_path(step), payloads)
+        self.hdfs.write(self.index_path(step), index.to_json().encode())
+        return index
+
+    def save_delta(self, step: int, *trees: Any, base: Optional[int] = None,
+                   meta: Optional[dict] = None) -> TensorIndex:
+        """Incremental save: write only the byte ranges of ``trees`` that
+        changed since step ``base`` (default: the latest restorable step),
+        found by diffing chunk CRCs against the base manifest — the base
+        data itself is never read.  ``trees`` must be congruent to the
+        base's (same names, dtypes, shapes ⇒ same logical layout); the
+        delta manifest carries this step's own chunk hashes, so deltas
+        chain: each save diffs against its immediate predecessor.
+        """
+        if base is None:
+            base = self.latest_step()
+            if base is None:
+                raise ValueError(
+                    "save_delta: no base snapshot to diff against — write "
+                    "a full save() first")
+        base_index = self.load_index(base)
+        if base_index.hash_chunk is None:
+            raise ValueError(
+                f"save_delta: base step {base} has no chunk hashes "
+                "(pre-delta checkpoint) — re-save it full first")
+        index, payloads = self._index_trees(step, trees, meta)
+        index.hash_chunk = base_index.hash_chunk
+        mine = [(e.name, e.dtype, e.shape, e.offset)
+                for e in index.entries_by_offset()]
+        theirs = [(e.name, e.dtype, e.shape, e.offset)
+                  for e in base_index.entries_by_offset()]
+        if mine != theirs:
+            raise ValueError(
+                f"save_delta: trees are not congruent to base step {base} "
+                "(names/dtypes/shapes must match) — write a full save() "
+                "instead")
+        if base_index.hash_chunk != self.diff_chunk:
+            # re-hash at the base's granularity so the diff is meaningful
+            index.chunk_hashes = {
+                e.name: chunk_crcs(data, base_index.hash_chunk)
+                for e, data in zip(index.entries_by_offset(), payloads)}
+        ranges: list[tuple[int, int, int]] = []   # (logical, len, delta_off)
+        blobs: list[bytes] = []
+        delta_off = 0
+        for e, data in zip(index.entries_by_offset(), payloads):
+            old = base_index.chunk_hashes.get(e.name, [])
+            for off, ln in changed_ranges(data, old, index.hash_chunk,
+                                          e.offset):
+                rel = off - e.offset
+                ranges.append((off, ln, delta_off))
+                blobs.append(data[rel:rel + ln])
+                delta_off += ln
+        index.delta = {"base_step": int(base), "ranges": ranges,
+                       "data_bytes": delta_off}
+        self._write_stream(self.delta_data_path(step), blobs)
         self.hdfs.write(self.index_path(step), index.to_json().encode())
         return index
 
@@ -145,17 +260,64 @@ class Checkpointer:
         return TensorIndex.from_json(
             self.hdfs.read(self.index_path(step)).decode())
 
-    def _reader(self, step: int, *, sched=None, priority: int = 0):
-        """Range reader for ``step``'s data stream.  ``sched``/``priority``
-        attach a ``repro.core.pipeline.IOScheduler``: striped preads then
-        hold per-file "dfs" tokens so restore waves of different priority
-        classes share the DFS without convoying each other."""
-        attrs = self.hdfs.attrs(self.data_path(step))
+    def _file_reader(self, path: str, *, sched=None, priority: int = 0):
+        attrs = self.hdfs.attrs(path)
         if "striped" in attrs:
-            return StripedReader(self.hdfs, self.data_path(step),
-                                 threads=self.threads, sched=sched,
-                                 priority=priority)
-        return _PlainReader(self.hdfs, self.data_path(step))
+            return StripedReader(self.hdfs, path, threads=self.threads,
+                                 sched=sched, priority=priority)
+        return _PlainReader(self.hdfs, path, sched=sched, priority=priority)
+
+    def _delta_chain(self, step: int,
+                     index: Optional[TensorIndex] = None) -> list:
+        """``[(step, index), ...]`` along ``step``'s delta chain, base
+        (full snapshot) first.  Raises on a cycle in the chain metadata."""
+        chain = []
+        seen: set[int] = set()
+        cur, idx = step, (index if index is not None
+                          else self.load_index(step))
+        while True:
+            if cur in seen:
+                raise ValueError(f"delta chain cycle at step {cur}")
+            seen.add(cur)
+            chain.append((cur, idx))
+            if not idx.is_delta:
+                break
+            cur = idx.base_step
+            idx = self.load_index(cur)
+        chain.reverse()
+        return chain
+
+    def _reader(self, step: int, *, sched=None, priority: int = 0,
+                index: Optional[TensorIndex] = None):
+        """Range reader for ``step``'s data stream.  ``sched``/``priority``
+        attach a ``repro.core.pipeline.IOScheduler``: preads then hold
+        "dfs" tokens so restore waves of different priority classes share
+        the DFS without convoying each other.
+
+        A full step gets its file's reader directly (no extra metadata
+        reads); a delta step gets a :class:`LayeredReader` over its base +
+        delta chain, so any logical range is read exactly once, from the
+        newest layer holding it."""
+        if self.hdfs.exists(self.data_path(step)):
+            return self._file_reader(self.data_path(step), sched=sched,
+                                     priority=priority)
+        chain = self._delta_chain(step, index=index)
+        base_step, base_index = chain[0]
+        if not self.hdfs.exists(self.data_path(base_step)):
+            raise FileNotFoundError(
+                f"checkpoint step {step}: base snapshot {base_step} data "
+                "file is missing (torn or garbage-collected save)")
+        readers = [self._file_reader(self.data_path(base_step),
+                                     sched=sched, priority=priority)]
+        layer_ranges = []
+        for s, idx in chain[1:]:
+            readers.append(self._file_reader(self.delta_data_path(s),
+                                             sched=sched,
+                                             priority=priority))
+            layer_ranges.append(idx.delta["ranges"])
+        total = base_index.total_bytes
+        return LayeredReader(readers, build_layer_map(total, layer_ranges),
+                             total)
 
     def _dim_slices(self, index: TensorIndex, likes: tuple, *,
                     specs=None, rules=None, axis_sizes=None, coords=None,
@@ -222,9 +384,10 @@ class Checkpointer:
                  for names in self._wave_names(index, len(likes))]
         return index, plans
 
-    def _execute_wave(self, reader, plan: RestorePlan) -> dict:
+    def _execute_wave(self, reader, plan: RestorePlan,
+                      priority: Optional[int] = None) -> dict:
         """Run one wave; {entry name: array} with bf16 views restored."""
-        arrays = execute_plan(reader, plan)
+        arrays = execute_plan(reader, plan, priority=priority)
         out = {}
         for t, arr in zip(plan.tensors, arrays):
             if t.name.endswith("#bf16"):
@@ -248,29 +411,41 @@ class Checkpointer:
     def restore_planned(self, step: int, *likes: Any, specs=None,
                         rules=None, axis_sizes=None, coords=None,
                         shard_slices: Optional[dict] = None,
-                        async_tail: bool = False, **plan_kw):
+                        async_tail: bool = False, sched=None,
+                        priority: int = CRITICAL,
+                        tail_priority: int = DEFERRED, **plan_kw):
         """Planner-backed restore of trees congruent to ``likes``.
 
         Returns ``tuple(trees)`` — or, with ``async_tail=True``, the pair
         ``(first_tree, Future)`` where the Future resolves to the tuple of
         remaining trees: the optimizer-state wave streams on a background
         thread so the caller can overlap it with model initialization.
+
+        ``sched`` attaches an ``IOScheduler`` to every pread the restore
+        issues: the params wave runs at ``priority`` (CRITICAL — it gates
+        model init) and the async optimizer tail at ``tail_priority``
+        (DEFERRED — it only has to land before the first optimizer
+        update), so a resume never convoys foreground startup I/O.
         """
         index, plans = self.plan_restore(
             step, *likes, specs=specs, rules=rules, axis_sizes=axis_sizes,
             coords=coords, shard_slices=shard_slices, **plan_kw)
-        reader = self._reader(step)
-        results = self._execute_wave(reader, plans[0]) if plans else {}
+        reader = self._reader(step, sched=sched, priority=priority,
+                              index=index)
+        results = (self._execute_wave(reader, plans[0], priority=priority)
+                   if plans else {})
         if not async_tail:
             for plan in plans[1:]:
-                results.update(self._execute_wave(reader, plan))
+                results.update(self._execute_wave(reader, plan,
+                                                  priority=priority))
             return tuple(self._assemble(likes, 0, results))
         first = self._assemble(likes[:1], 0, results)[0]
 
         def _tail():
             res = {}
             for plan in plans[1:]:
-                res.update(self._execute_wave(reader, plan))
+                res.update(self._execute_wave(reader, plan,
+                                              priority=tail_priority))
             return tuple(self._assemble(likes[1:], 1, res))
 
         if len(likes) <= 1:
@@ -283,7 +458,8 @@ class Checkpointer:
         return first, fut
 
     def restore(self, step: int, *likes: Any,
-                shard_slices: Optional[dict] = None) -> tuple:
+                shard_slices: Optional[dict] = None, sched=None,
+                priority: int = CRITICAL) -> tuple:
         """Restore trees congruent to ``likes`` (pytrees of arrays or
         ShapeDtypeStructs).
 
@@ -292,9 +468,33 @@ class Checkpointer:
         returned leaves then hold only those rows.  (For arbitrary-dim
         sharding use ``restore_planned`` with PartitionSpec trees.)
         """
-        return self.restore_planned(step, *likes, shard_slices=shard_slices)
+        return self.restore_planned(step, *likes, shard_slices=shard_slices,
+                                    sched=sched, priority=priority)
 
-    def restore_bytes_for_shard(self, step: int, fraction: float) -> int:
-        """How many bytes a host reading 1/N of every tensor fetches."""
+    def restore_bytes_for_shard(self, step: int, fraction: float, *,
+                                specs=None, rules=None, axis_sizes=None,
+                                coords=None,
+                                shard_slices: Optional[dict] = None) -> int:
+        """Planned bytes for a host reading 1/N of every SHARDED tensor.
+
+        Sharded entries count at ``fraction``; replicated entries are read
+        in full by every host and count at 1.0.  Which entries are sharded
+        comes from the same ``specs``/``shard_slices`` forms
+        ``plan_restore`` takes; with neither, every non-scalar entry is
+        assumed sharded (scalars — step counters, loss scales — are always
+        replicated and no longer undercounted)."""
         index = self.load_index(step)
-        return int(sum(e.nbytes * fraction for e in index.entries.values()))
+        likes: tuple = ()
+        if specs is not None:
+            likes = (None,) * len(specs)   # _dim_slices only needs arity
+        sliced = self._dim_slices(index, likes, specs=specs, rules=rules,
+                                  axis_sizes=axis_sizes, coords=coords,
+                                  shard_slices=shard_slices)
+        have_info = specs is not None or shard_slices
+        total = 0.0
+        for e in index.entries.values():
+            if e.name in sliced or (not have_info and e.shape):
+                total += e.nbytes * fraction
+            else:
+                total += e.nbytes
+        return int(total)

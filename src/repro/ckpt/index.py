@@ -1,11 +1,29 @@
 """Checkpoint tensor manifest: name -> (dtype, shape, offset) within the
-single logical checkpoint stream stored (striped) in the DFS."""
+single logical checkpoint stream stored (striped) in the DFS.
+
+The manifest optionally carries two extensions used by incremental delta
+checkpoints (repro.ckpt.delta):
+
+* **per-tensor chunk hashes** — ``hash_chunk`` (chunk granularity in
+  bytes) plus ``chunk_hashes[name]`` (CRC32 per chunk of the tensor's
+  byte stream).  ``Checkpointer.save_delta`` diffs the new state against
+  these to find the byte ranges that changed since the base snapshot
+  without re-reading the base data.
+* **delta descriptor** — for a delta step, ``delta`` records the base
+  step and the ``(logical_offset, length, delta_stream_offset)`` ranges
+  the step's ``.delta`` data file actually holds.  A delta step's tensor
+  entries are byte-identical to its base's (congruent trees), so the
+  logical stream layout never changes along a chain.
+
+Both fields are absent from pre-delta manifests and round-trip as empty —
+the JSON format stays readable by and from older checkpoints.
+"""
 
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -31,6 +49,18 @@ class TensorIndex:
     def __init__(self, entries: Iterable[TensorEntry] = (), meta: dict = None):
         self.entries: dict[str, TensorEntry] = {e.name: e for e in entries}
         self.meta = meta or {}
+        # delta extensions (see module docstring); absent on old manifests
+        self.hash_chunk: Optional[int] = None
+        self.chunk_hashes: dict[str, list[int]] = {}
+        self.delta: Optional[dict] = None
+
+    @property
+    def is_delta(self) -> bool:
+        return self.delta is not None
+
+    @property
+    def base_step(self) -> Optional[int]:
+        return self.delta["base_step"] if self.delta else None
 
     @property
     def total_bytes(self) -> int:
@@ -69,17 +99,32 @@ class TensorIndex:
         return e
 
     def to_json(self) -> str:
-        return json.dumps({
+        d = {
             "meta": self.meta,
             "tensors": [
                 {"name": e.name, "dtype": e.dtype, "shape": list(e.shape),
                  "offset": e.offset}
                 for e in sorted(self.entries.values(), key=lambda e: e.offset)
-            ]})
+            ]}
+        if self.hash_chunk is not None:
+            d["hash_chunk"] = self.hash_chunk
+            d["chunk_hashes"] = self.chunk_hashes
+        if self.delta is not None:
+            d["delta"] = self.delta
+        return json.dumps(d)
 
     @classmethod
     def from_json(cls, raw: str) -> "TensorIndex":
         d = json.loads(raw)
-        return cls((TensorEntry(name=t["name"], dtype=t["dtype"],
-                                shape=tuple(t["shape"]), offset=t["offset"])
-                    for t in d["tensors"]), meta=d.get("meta", {}))
+        idx = cls((TensorEntry(name=t["name"], dtype=t["dtype"],
+                               shape=tuple(t["shape"]), offset=t["offset"])
+                   for t in d["tensors"]), meta=d.get("meta", {}))
+        idx.hash_chunk = d.get("hash_chunk")
+        idx.chunk_hashes = {k: list(v)
+                            for k, v in d.get("chunk_hashes", {}).items()}
+        delta = d.get("delta")
+        if delta is not None:
+            delta = dict(delta,
+                         ranges=[tuple(r) for r in delta.get("ranges", [])])
+        idx.delta = delta
+        return idx

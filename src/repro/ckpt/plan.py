@@ -277,7 +277,8 @@ def _checked_pread_many(reader, ranges, into, priority=None) -> None:
                 f"stream offset {off}")
 
 
-def execute_plan(reader, plan: RestorePlan) -> list[np.ndarray]:
+def execute_plan(reader, plan: RestorePlan, *,
+                 priority: Optional[int] = None) -> list[np.ndarray]:
     """Run a plan's batched reads through ``reader.pread_many`` and return
     one array per TensorPlan (stored dtype, local shard shape).
 
@@ -299,7 +300,7 @@ def execute_plan(reader, plan: RestorePlan) -> list[np.ndarray]:
             into.append(scratch)
             scatter.append((op, scratch))
     if ranges:
-        _checked_pread_many(reader, ranges, into)
+        _checked_pread_many(reader, ranges, into, priority=priority)
     for op, scratch in scatter:
         for s in op.segments:
             bufs[s.tensor][s.dest_off:s.dest_off + s.length] = \

@@ -353,13 +353,20 @@ class BootseerRuntime:
 
         def ckpt_params(deps):
             # wave-0 (params) preads depend only on DFS availability:
-            # they start at t=0 and overlap the image fetch
+            # they start at t=0 and overlap the image fetch.  With the
+            # optimizer on, the reads first consult the node's fabric
+            # cache for ranges staged by restore-ahead prefetch — a warm
+            # crash-restart replays the params wave from node-local disk
             if spec.resume_step is None or checkpointer is None:
                 return None
             from repro.ckpt.plan import read_plan
             reader, plans = _restore_plans(
                 checkpointer, spec.resume_step, rank=rank, nodes=n,
-                resume_plan=spec.resume_plan, sched=self.io_sched)
+                resume_plan=spec.resume_plan, sched=self.io_sched,
+                cache=(self._node_cache(spec.job_id, rank)
+                       if self.optimize else None),
+                on_hit=lambda nb: self.hdfs.account_fabric(
+                    restore_ahead_hit_bytes=nb))
             if not plans:
                 return None
             read_plan(reader, plans[0], priority=CRITICAL)
@@ -464,7 +471,15 @@ class BootseerRuntime:
                  - fab0["reconstructed_bytes"],
                  "corrupt_chunks": fab1["corrupt_chunks"]
                  - fab0["corrupt_chunks"],
-                 "evictions": fab1["evictions"] - fab0["evictions"]}
+                 "evictions": fab1["evictions"] - fab0["evictions"],
+                 # continuous recovery: params-wave bytes served from
+                 # restore-ahead cache entries instead of DFS preads
+                 "restore_ahead_hit_bytes":
+                     fab1.get("restore_ahead_hit_bytes", 0)
+                     - fab0.get("restore_ahead_hit_bytes", 0),
+                 "restore_ahead_prefetch_bytes":
+                     fab1.get("restore_ahead_prefetch_bytes", 0)
+                     - fab0.get("restore_ahead_prefetch_bytes", 0)}
         if self.io_sched is not None:
             notes["io_sched"] = self.io_sched.snapshot()
         if not include_image:
@@ -492,14 +507,82 @@ class BootseerRuntime:
         (``env.install`` keeps only its ``env.restore`` edge)."""
         return self._run(spec, checkpointer, include_image=False, tag="h")
 
+    # ------------------------------------------------------------------
+    def restore_ahead(self, spec: JobSpec, checkpointer,
+                      step: int) -> None:
+        """Arm restore-ahead for ``step`` (continuous recovery).
+
+        Call after a checkpoint lands: each of the job's nodes stages its
+        wave-0 (params) plan ranges into its fabric ``NodeCache`` as
+        range-addressed entries, pinned under the job so cache pressure
+        cannot evict them before the restart that needs them.  The
+        prefetch runs on the deferred pool at DEFERRED priority — it can
+        never convoy a live startup's critical reads.  A later
+        crash-restart of the same step recomputes the identical plan, so
+        its params wave is served from node-local disk with zero DFS
+        preads (reported as ``restore_ahead_hit_bytes`` in
+        ``StartupResult.notes``).  Re-arming for a newer step releases
+        the previous step's pins first, bounding the pinned set to one
+        checkpoint's wave 0 per node.
+        """
+        if not self.optimize:
+            return
+        from repro.fabric.cache import prefetch_ranges
+        n = spec.num_nodes
+        stream = _ckpt_stream(checkpointer, step)
+        tag = f"restore-ahead/{spec.job_id}"
+
+        def arm(rank: int):
+            def thunk():
+                cache = self._node_cache(spec.job_id, rank)
+                cache.unpin_job(tag)
+                reader, plans = _restore_plans(
+                    checkpointer, step, rank=rank, nodes=n,
+                    resume_plan=spec.resume_plan, sched=self.io_sched)
+                if not plans:
+                    return 0
+                stored = prefetch_ranges(
+                    reader, cache, stream,
+                    [(op.offset, op.length) for op in plans[0].reads],
+                    job=tag, priority=DEFERRED)
+                if stored:
+                    self.hdfs.account_fabric(
+                        restore_ahead_prefetch_bytes=stored)
+                return stored
+            return thunk
+
+        for rank in range(n):
+            self._submit_deferred(arm(rank))
+
+
+def _ckpt_stream(checkpointer, step: int) -> str:
+    """Cache stream id for a checkpoint step's LOGICAL data stream.
+
+    Range-addressed cache entries (repro.fabric.cache) key on this id +
+    logical offsets, so a delta step — whose bytes come from several
+    physical files through one ``LayeredReader`` — caches under the same
+    keys its planned restore will look up.  Checkpoint steps are immutable
+    once written, so the id names immutable bytes."""
+    return f"ckpt:{checkpointer.base}/step_{step:08d}"
+
 
 def _restore_plans(checkpointer, step: int, *, rank: int, nodes: int,
-                   resume_plan: Any = "full", sched=None):
-    """Resolve ``resume_plan`` into (reader, per-wave RestorePlans)."""
+                   resume_plan: Any = "full", sched=None, cache=None,
+                   on_hit=None):
+    """Resolve ``resume_plan`` into (reader, per-wave RestorePlans).
+
+    With ``cache`` (a fabric ``NodeCache``), the reader consults
+    range-addressed entries staged by restore-ahead prefetch before
+    issuing DFS preads; ``on_hit(nbytes)`` reports the served bytes."""
     from repro.ckpt.plan import plan_for_rank
+    from repro.fabric.cache import CachedRangeReader
 
     index = checkpointer.load_index(step)
-    reader = checkpointer._reader(step, sched=sched)
+    reader = checkpointer._reader(step, sched=sched, index=index)
+    if cache is not None:
+        reader = CachedRangeReader(reader, cache,
+                                   _ckpt_stream(checkpointer, step),
+                                   on_hit=on_hit)
     if callable(resume_plan):
         plans = list(resume_plan(index, rank, nodes))
     else:

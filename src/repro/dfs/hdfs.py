@@ -111,7 +111,12 @@ class HdfsCluster:
         # without holding every short-lived reader
         self.fabric_stats = {"degraded_reads": 0, "reconstructed_bytes": 0,
                              "reconstruction_read_bytes": 0,
-                             "corrupt_chunks": 0}
+                             "corrupt_chunks": 0,
+                             # restore-ahead prefetch (repro.core.bootseer):
+                             # checkpoint bytes staged into / served from
+                             # node caches instead of DFS preads
+                             "restore_ahead_prefetch_bytes": 0,
+                             "restore_ahead_hit_bytes": 0}
         for g in range(num_groups):
             (self.root / f"group{g:02d}").mkdir(parents=True, exist_ok=True)
         self._meta_path = self.root / "namenode.json"

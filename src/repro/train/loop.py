@@ -17,10 +17,10 @@ from repro.train.step import jit_train_step
 def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
                opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
                log_every: int = 10, log_fn: Callable = print,
-               checkpointer=None, ckpt_every: int = 0,
+               checkpointer=None, ckpt_every: int = 0, full_every: int = 0,
                params=None, opt_state=None, start_step: int = 0,
                resume_from: Optional[int] = None, restore_specs=None,
-               restore_coords: Optional[dict] = None):
+               restore_coords: Optional[dict] = None, restore_sched=None):
     """Train on the synthetic stream.  Returns (params, opt_state, history).
 
     ``resume_from``: checkpoint step to restore through the planner
@@ -32,6 +32,13 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
     sharding-aware partial restore against ``model.rules``;
     ``restore_coords`` gives this host's mesh coordinates (default: mesh
     position of rank 0 — on a trivial mesh that is the full extent).
+    ``restore_sched`` attaches an ``IOScheduler`` to the restore's preads
+    (params wave CRITICAL, async optimizer tail DEFERRED).
+
+    ``full_every``: with ``ckpt_every``, write every ``full_every``-th
+    checkpoint as a full snapshot and the ones between as incremental
+    deltas chained against the previous save (``save_delta``) — the
+    continuous-recovery cadence.  0 (default) keeps every save full.
     """
     from repro.data.loader import ShardedLoader
     from repro.data.synthetic import SyntheticStream
@@ -42,13 +49,19 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
     if opt_state is None:
         opt_state = adamw_init(params)
 
+    if resume_from is not None and checkpointer is None:
+        raise ValueError(
+            f"resume_from={resume_from} requires a checkpointer — without "
+            "one the run would silently train from scratch")
+
     opt_tail = None
-    if resume_from is not None and checkpointer is not None:
+    if resume_from is not None:
         if restore_coords is None and restore_specs is not None:
             restore_coords = model.rules.coords_of_rank(0)
         params, opt_tail = checkpointer.restore_planned(
             resume_from, params, opt_state, specs=restore_specs,
-            rules=model.rules, coords=restore_coords, async_tail=True)
+            rules=model.rules, coords=restore_coords, async_tail=True,
+            sched=restore_sched)
         params = jax.tree.map(jax.numpy.asarray, params)
         start_step = resume_from
 
@@ -68,6 +81,8 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
         opt_state = jax.tree.map(jax.numpy.asarray, opt_state)
 
     history = []
+    saves = 0       # saves this run: every full_every-th one is full
+    last_saved: Optional[int] = None
     t0 = time.perf_counter()
     for step in range(start_step, start_step + steps):
         data = loader(step)
@@ -81,5 +96,12 @@ def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
                    f"gnorm {float(metrics['grad_norm']):.3f}")
         if checkpointer is not None and ckpt_every and \
                 (step + 1) % ckpt_every == 0:
-            checkpointer.save(step + 1, params, opt_state)
+            if full_every and saves % full_every != 0 \
+                    and last_saved is not None:
+                checkpointer.save_delta(step + 1, params, opt_state,
+                                        base=last_saved)
+            else:
+                checkpointer.save(step + 1, params, opt_state)
+            saves += 1
+            last_saved = step + 1
     return params, opt_state, history

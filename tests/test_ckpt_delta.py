@@ -1,0 +1,365 @@
+"""Continuous recovery: incremental delta checkpoints, restore-ahead
+prefetch, and the restore-path bug sweep (steps() hygiene, scheduler
+threading, replicated-tensor byte accounting, tail-failure surfacing)."""
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import Checkpointer
+from repro.ckpt.checkpoint import _PlainReader
+from repro.ckpt.delta import build_layer_map, changed_ranges, chunk_crcs
+from repro.core.pipeline import DEFERRED, IOScheduler
+from repro.dfs.hdfs import HdfsCluster
+from repro.fabric.cache import (CachedRangeReader, NodeCache,
+                                prefetch_ranges, range_key)
+
+
+@pytest.fixture()
+def hdfs(tmp_path):
+    return HdfsCluster(tmp_path / "h", num_groups=8, block_size=1 << 20)
+
+
+def _trees(seed=0, rows=64, cols=64):
+    rng = np.random.default_rng(seed)
+    params = {"w": rng.standard_normal((rows, cols)).astype(np.float32),
+              "b": np.zeros(cols, np.float32)}
+    opt = {"m": np.zeros((rows, cols), np.float32),
+           "step": np.int32(0)}
+    return params, opt
+
+
+# ----------------------------------------------------------------------
+# diff + layer-map units
+# ----------------------------------------------------------------------
+
+def test_changed_ranges_diff_semantics():
+    chunk = 8
+    old = bytes(range(32))
+    new = bytearray(old)
+    new[3] = 0xFF            # chunk 0
+    new[17] = 0xFF           # chunk 2
+    got = list(changed_ranges(bytes(new), chunk_crcs(old, chunk), chunk))
+    assert got == [(0, 8), (16, 8)]
+    # adjacent changed chunks coalesce; base_offset shifts everything
+    new[11] = 0xFF           # chunk 1 too -> chunks 0..2 merge
+    got = list(changed_ranges(bytes(new), chunk_crcs(old, chunk), chunk,
+                              base_offset=100))
+    assert got == [(100, 24)]
+    # identical data: nothing changed
+    assert list(changed_ranges(old, chunk_crcs(old, chunk), chunk)) == []
+    # chunks past the end of old hashes count as changed (defensive)
+    assert list(changed_ranges(old, chunk_crcs(old[:8], chunk), chunk)) \
+        == [(8, 24)]
+
+
+def test_build_layer_map_newest_layer_wins():
+    # base [0,100); layer 1 writes [10,30); layer 2 writes [20,50)
+    segs = build_layer_map(100, [[(10, 20, 0)], [(20, 30, 0)]])
+    assert segs == [(0, 10, 0, 0), (10, 20, 1, 0), (20, 50, 2, 0),
+                    (50, 100, 0, 50)]
+    # segments tile the extent exactly
+    assert segs[0][0] == 0 and segs[-1][1] == 100
+    for a, b in zip(segs, segs[1:]):
+        assert a[1] == b[0]
+
+
+# ----------------------------------------------------------------------
+# delta save / chain restore
+# ----------------------------------------------------------------------
+
+def test_delta_chain_restore_byte_identical(hdfs):
+    ck = Checkpointer(hdfs, width=4, chunk=4096, stripe=8192,
+                      diff_chunk=1024)
+    params, opt = _trees()
+    ck.save(100, params, opt)
+    p2 = {k: v.copy() for k, v in params.items()}
+    p2["w"][3] += 1.0
+    o2 = {"m": opt["m"].copy(), "step": np.int32(110)}
+    idx = ck.save_delta(110, p2, o2)
+    assert idx.is_delta and idx.base_step == 100
+    assert idx.delta["data_bytes"] < idx.total_bytes / 2
+    p3 = {k: v.copy() for k, v in p2.items()}
+    p3["w"][40] -= 2.0
+    o3 = {"m": o2["m"], "step": np.int32(120)}
+    ck.save_delta(120, p3, o3)
+
+    rp, ro = ck.restore(120, params, opt)
+    assert np.array_equal(rp["w"], p3["w"])
+    assert np.array_equal(ro["m"], o3["m"])
+    assert int(ro["step"]) == 120
+
+    # the composed logical stream equals an equivalent full snapshot
+    ck.save(121, p3, o3)
+    total = idx.total_bytes
+    a = ck._reader(120).pread(0, total)
+    b = ck._reader(121).pread(0, total)
+    assert hashlib.sha256(a).digest() == hashlib.sha256(b).digest()
+
+
+def test_delta_save_writes_less_than_full(hdfs):
+    ck = Checkpointer(hdfs, width=2, chunk=1024, stripe=1024,
+                      diff_chunk=1024)
+    params, opt = _trees(rows=128)
+    hdfs.reset_counters()
+    ck.save(1, params, opt)
+    full_write = hdfs.write_bytes
+    p2 = {k: v.copy() for k, v in params.items()}
+    p2["w"][:12] += 0.5      # sparse update: ~10% of the rows
+    hdfs.reset_counters()
+    ck.save_delta(2, p2, opt)
+    assert hdfs.write_bytes < full_write / 2
+
+
+def test_save_delta_guards(hdfs):
+    ck = Checkpointer(hdfs, width=2)
+    params, opt = _trees()
+    with pytest.raises(ValueError, match="no base snapshot"):
+        ck.save_delta(10, params, opt)
+    ck.save(10, params, opt)
+    # incongruent trees (different shape) refuse to delta
+    bad = {"w": np.zeros((8, 8), np.float32), "b": params["b"]}
+    with pytest.raises(ValueError, match="not congruent"):
+        ck.save_delta(20, bad, opt)
+    # a pre-delta base manifest (no chunk hashes) refuses too
+    idx = ck.load_index(10)
+    idx.hash_chunk, idx.chunk_hashes = None, {}
+    hdfs.delete(ck.index_path(10))
+    hdfs.write(ck.index_path(10), idx.to_json().encode())
+    with pytest.raises(ValueError, match="no chunk hashes"):
+        ck.save_delta(20, params, opt)
+
+
+def test_train_loop_full_every_delta_cadence(hdfs, rules):
+    from repro.configs import get_tiny
+    from repro.models.model import Model
+    from repro.train.loop import train_loop
+    model = Model(get_tiny("qwen2.5-3b"), rules)
+    ck = Checkpointer(hdfs, width=4)
+    train_loop(model, batch=2, seq_len=16, steps=4, log_fn=lambda *_: None,
+               checkpointer=ck, ckpt_every=1, full_every=3)
+    assert ck.steps() == [1, 2, 3, 4]
+    kinds = {s: ck.load_index(s).is_delta for s in ck.steps()}
+    # save 1 full, 2-3 deltas chained, 4 full again (every 3rd save)
+    assert kinds == {1: False, 2: True, 3: True, 4: False}
+    assert ck.load_index(3).base_step == 2
+    # resume from the middle of the chain restores through the layers
+    _, _, hist = train_loop(model, batch=2, seq_len=16, steps=2,
+                            log_fn=lambda *_: None, checkpointer=ck,
+                            resume_from=3)
+    assert hist[0]["step"] == 3
+
+
+# ----------------------------------------------------------------------
+# satellite 1: steps() hygiene
+# ----------------------------------------------------------------------
+
+def test_steps_skips_foreign_and_torn_entries(hdfs):
+    ck = Checkpointer(hdfs, width=2)
+    params, opt = _trees()
+    ck.save(10, params, opt)
+    ck.save_delta(20, params, opt)   # delta step counts (has .delta file)
+    # foreign manifests in the checkpoint dir must not crash the listing
+    hdfs.write(ck.base + "/foreign.index.json", b"{}")
+    hdfs.write(ck.base + "/step_final.index.json", b"{}")
+    # torn save: index landed, data never did — not a resume candidate
+    hdfs.write(ck.index_path(99), ck.load_index(10).to_json().encode())
+    assert ck.steps() == [10, 20]
+    assert ck.latest_step() == 20
+
+
+# ----------------------------------------------------------------------
+# satellite 2: scheduler threading through restore
+# ----------------------------------------------------------------------
+
+def test_restore_planned_scheduler_accounting(hdfs):
+    ck = Checkpointer(hdfs, width=4)
+    params, opt = _trees(rows=128)
+    ck.save(7, params, opt)
+    sched = IOScheduler()
+    first, fut = ck.restore_planned(7, params, opt, async_tail=True,
+                                    sched=sched)
+    (opt_r,) = fut.result(timeout=30)
+    assert np.array_equal(first["w"], params["w"])
+    assert np.array_equal(opt_r["m"], opt["m"])
+    snap = sched.snapshot()["dfs"]["bytes"]
+    # params wave ran CRITICAL, the async optimizer tail DEFERRED
+    assert snap["critical"] >= params["w"].nbytes
+    assert snap["deferred"] >= opt["m"].nbytes
+
+
+def test_plain_reader_threads_sched_and_priority(hdfs):
+    hdfs.write("/f", bytes(range(256)) * 16)
+    sched = IOScheduler()
+    r = _PlainReader(hdfs, "/f", sched=sched, priority=DEFERRED)
+    assert r.pread_many([(0, 100)]) == [bytes(range(100))]
+    # per-call priority overrides the reader default
+    r.pread_many([(0, 50)], priority=0)
+    snap = sched.snapshot()["dfs"]["bytes"]
+    assert snap == {"critical": 50, "elevated": 0, "deferred": 100}
+
+
+def test_plain_checkpointer_restore_with_sched(hdfs):
+    ck = Checkpointer(hdfs, striped=False)
+    params, opt = _trees()
+    ck.save(3, params, opt)
+    sched = IOScheduler()
+    rp, ro = ck.restore(3, params, opt, sched=sched)
+    assert np.array_equal(rp["w"], params["w"])
+    assert sched.snapshot()["dfs"]["bytes"]["critical"] > 0
+
+
+# ----------------------------------------------------------------------
+# satellite 3: replicated tensors in the byte estimate
+# ----------------------------------------------------------------------
+
+def test_restore_bytes_for_shard_counts_replicated_full(hdfs):
+    ck = Checkpointer(hdfs, width=2)
+    params, _ = _trees(rows=64, cols=64)   # w 16 KiB, b 256 B
+    ck.save(5, params)
+    w, b = params["w"].nbytes, params["b"].nbytes
+    # leading-dim sharded w, replicated b: b is read in full by every host
+    est = ck.restore_bytes_for_shard(5, 0.25,
+                                     shard_slices={"t0['w']": (0, 16)})
+    assert est == int(w * 0.25 + b)
+    # no sharding info: non-scalars at fraction (legacy), scalars full
+    ck.save(6, {"w": params["w"], "n": np.int32(7)})
+    est = ck.restore_bytes_for_shard(6, 0.5)
+    assert est == int(w * 0.5 + 4)
+
+
+# ----------------------------------------------------------------------
+# range-addressed cache + restore-ahead
+# ----------------------------------------------------------------------
+
+def test_cached_range_reader_hits_and_misses(hdfs, tmp_path):
+    payload = bytes(range(256)) * 64
+    hdfs.write("/ckpt/x.data", payload)
+    inner = _PlainReader(hdfs, "/ckpt/x.data")
+    cache = NodeCache(tmp_path / "c")
+    stream = "ckpt:/ckpt/x"
+    staged = prefetch_ranges(inner, cache, stream, [(0, 1024), (4096, 512)])
+    assert staged == 1536
+    # re-arming skips already-cached ranges
+    assert prefetch_ranges(inner, cache, stream, [(0, 1024)]) == 0
+
+    hits = []
+    r = CachedRangeReader(inner, cache, stream, on_hit=hits.append)
+    hdfs.reset_counters()
+    out = r.pread_many([(0, 1024), (2048, 256), (4096, 512)])
+    assert out[0] == payload[:1024]
+    assert out[1] == payload[2048:2048 + 256]
+    assert out[2] == payload[4096:4096 + 512]
+    assert r.cache_stats == {"hit_bytes": 1536, "miss_bytes": 256,
+                             "hits": 2, "misses": 1}
+    assert sum(hits) == 1536
+    assert hdfs.read_bytes == 256        # only the miss touched the DFS
+    # zero-copy into= path serves hits from cache as well
+    bufs = [bytearray(1024)]
+    counts = r.pread_many([(0, 1024)], into=bufs)
+    assert counts == [1024] and bytes(bufs[0]) == payload[:1024]
+
+
+def test_range_key_is_filename_safe():
+    key = range_key("/ckpt/step_00000003.data", 4096, 65536)
+    assert "/" not in key and key.startswith("range.")
+    assert key == range_key("/ckpt/step_00000003.data", 4096, 65536)
+    assert key != range_key("/ckpt/step_00000004.data", 4096, 65536)
+
+
+def test_bootseer_restore_ahead_warm_restart(tmp_path, rng):
+    from repro.blockstore.image import build_image
+    from repro.blockstore.registry import Registry
+    from repro.core.bootseer import BootseerRuntime, JobSpec
+
+    BS = 64 * 1024
+    src = tmp_path / "src"
+    (src / "bin").mkdir(parents=True)
+    (src / "bin" / "start").write_bytes(
+        rng.integers(0, 256, 2 * BS, dtype=np.uint8).tobytes())
+    reg = Registry(tmp_path / "reg")
+    build_image(src, reg, "img", block_size=BS)
+    hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=8, block_size=1 << 20)
+    ck = Checkpointer(hdfs, width=8)
+    params = {"w": np.arange(64 * 4096, dtype=np.float32).reshape(64, -1)}
+    opt = {"m": np.zeros((64, 4096), np.float32)}
+    ck.save(100, params, opt)
+    spec = JobSpec(job_id="j", image="img", num_nodes=2,
+                   startup_reads=[("bin/start", 0, -1)],
+                   resume_step=100, resume_plan="rows")
+    with BootseerRuntime(registry=reg, hdfs=hdfs, workdir=tmp_path / "w",
+                         optimize=True) as rt:
+        cold = rt.run_startup(spec, checkpointer=ck)
+        assert cold.notes["restore_ahead_hit_bytes"] == 0
+
+        rt.restore_ahead(spec, ck, 100)
+        rt.drain_deferred()
+        assert hdfs.fabric_stats["restore_ahead_prefetch_bytes"] > 0
+
+        warm = rt.run_startup(spec, checkpointer=ck)
+        rt.drain_deferred()
+        # every node's full wave-0 (params) share came from its NodeCache
+        wave0 = params["w"].nbytes            # rows plan: 1/2 per node x 2
+        assert warm.notes["restore_ahead_hit_bytes"] == wave0
+
+
+# ----------------------------------------------------------------------
+# satellite 4: train_loop resume guards + tail-failure surfacing
+# ----------------------------------------------------------------------
+
+def test_train_loop_resume_without_checkpointer_raises(rules):
+    from repro.configs import get_tiny
+    from repro.models.model import Model
+    from repro.train.loop import train_loop
+    model = Model(get_tiny("qwen2.5-3b"), rules)
+    with pytest.raises(ValueError, match="requires a checkpointer"):
+        train_loop(model, batch=2, seq_len=16, steps=1,
+                   log_fn=lambda *_: None, resume_from=4)
+
+
+def test_async_tail_failure_surfaces_via_future(hdfs):
+    from repro.dfs.striped import StripeMissingError
+    ck = Checkpointer(hdfs, width=2, chunk=1024, stripe=1024)
+    params = {"w": np.zeros(64, np.float32)}          # wave 0: 256 B
+    opt = {"m": np.arange(4096, dtype=np.float32)}    # wave 1: 16 KiB
+    ck.save(50, params, opt)
+    # drop a physical stripe file that only wave 1 needs: params live in
+    # chunk 0 (file 0), the opt tensor spans both stripe files
+    files = hdfs.attrs(ck.data_path(50))["striped"]["files"]
+    g, name = files[1]
+    (hdfs.root / f"group{g:02d}" / name).unlink()
+    first, fut = ck.restore_planned(50, params, opt, async_tail=True)
+    assert np.array_equal(first["w"], params["w"])    # wave 0 unharmed
+    with pytest.raises(StripeMissingError):
+        fut.result(timeout=30)
+
+
+# ----------------------------------------------------------------------
+# simcluster recovery model
+# ----------------------------------------------------------------------
+
+def test_simcluster_restore_ahead_and_delta_chain():
+    from repro.simcluster.workload import StartupWorkload
+
+    base = StartupWorkload(bootseer=True, seed=3).run(32)
+    covered = StartupWorkload(bootseer=True, seed=3,
+                              restore_ahead_coverage=1.0).run(32)
+    mi = "model_init"
+    assert covered["restore_ahead_local_bytes"] > 0
+    assert base["restore_ahead_local_bytes"] == 0
+    # cache-served params bytes shrink the model-init DFS transfer
+    assert max(covered["stages"][mi].values()) \
+        < max(base["stages"][mi].values())
+
+    chained = StartupWorkload(bootseer=True, seed=3,
+                              delta_chain_len=4).run(32)
+    assert max(chained["stages"][mi].values()) \
+        > max(base["stages"][mi].values())
+    # a cold (baseline) run ignores both knobs
+    cold = StartupWorkload(bootseer=False, seed=3,
+                           restore_ahead_coverage=1.0,
+                           delta_chain_len=4).run(32)
+    assert cold["restore_ahead_local_bytes"] == 0
