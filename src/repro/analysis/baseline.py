@@ -52,18 +52,28 @@ def fingerprint(f: Finding) -> str:
 @dataclass
 class Baseline:
     entries: Dict[str, str] = field(default_factory=dict)  # fp -> why
+    # the raw suppression dicts as loaded, so a scoped rewrite
+    # (``--write-baseline --only <check>``) can keep other checkers'
+    # entries verbatim instead of dropping them
+    raw: List[dict] = field(default_factory=list)
 
     @classmethod
     def load(cls, path: Path) -> "Baseline":
         if not path.exists():
             return cls()
         data = json.loads(path.read_text())
+        raw = list(data.get("suppressions", []))
         entries = {e["fingerprint"]: e.get("justification", "")
-                   for e in data.get("suppressions", [])}
-        return cls(entries=entries)
+                   for e in raw}
+        return cls(entries=entries, raw=raw)
 
     def save(self, path: Path, findings: List[Finding],
-             justifications: Dict[str, str] | None = None):
+             justifications: Dict[str, str] | None = None,
+             keep: List[dict] | None = None):
+        """Rewrite ``path`` from ``findings``: entries whose finding is
+        no longer produced are pruned, existing justifications are kept.
+        ``keep`` appends extra suppression dicts verbatim (entries for
+        checks excluded from a scoped run)."""
         justifications = justifications or {}
         sup = []
         for f in sorted(findings, key=lambda x: (x.check, x.file, x.line)):
@@ -77,6 +87,10 @@ class Baseline:
                 "justification": justifications.get(
                     fp, self.entries.get(fp, "TODO: justify or fix")),
             })
+        seen = {e["fingerprint"] for e in sup}
+        for e in keep or []:
+            if e.get("fingerprint") not in seen:
+                sup.append(e)
         path.write_text(json.dumps({"suppressions": sup}, indent=2) + "\n")
 
     def split(self, findings: List[Finding]

@@ -1,4 +1,4 @@
-"""``repro-lint`` — the concurrency-lint entry point.
+"""``repro-lint`` — the concurrency + I/O-discipline lint entry point.
 
 Stdlib only: the CI job that runs this needs no numpy/jax install (the
 ``src/repro`` tree is parsed, never imported).
@@ -11,6 +11,8 @@ Typical invocations::
     repro-lint                                  # lint src/repro
     repro-lint --baseline analysis_baseline.json
     repro-lint --baseline analysis_baseline.json --write-baseline
+    repro-lint --only unscheduled-io            # one checker family
+    repro-lint --format=json                    # report JSON on stdout
     repro-lint --report lint-report.json        # CI artifact
 """
 
@@ -26,6 +28,7 @@ from typing import List, Optional
 from repro.analysis.baseline import Baseline, Finding
 from repro.analysis.callgraph import Package
 from repro.analysis.checks import run_checks
+from repro.analysis.iochecks import run_io_checks
 from repro.analysis.lockorder import LockOrderGraph, build_lock_order
 from repro.analysis.locks import LockTable, collect_locks
 
@@ -64,15 +67,24 @@ class Report:
 
 def run_analysis(roots: Optional[List[Path]] = None,
                  baseline_path: Optional[Path] = None,
-                 include_analysis: bool = False) -> Report:
+                 include_analysis: bool = False,
+                 only: Optional[List[str]] = None) -> Report:
     roots = roots or [DEFAULT_ROOT]
     exclude = () if include_analysis else ("analysis",)
     pkg = Package.load(roots, exclude_parts=exclude)
     table = collect_locks(pkg)
     graph = build_lock_order(pkg, table)
-    findings = run_checks(pkg, table, graph)
+    findings = run_checks(pkg, table, graph) + run_io_checks(pkg)
+    if only:
+        findings = [f for f in findings if f.check in only]
     baseline = Baseline.load(baseline_path) if baseline_path else Baseline()
     new, suppressed, stale = baseline.split(findings)
+    if only:
+        # a scoped run can't tell whether other checkers' entries are
+        # stale — only report staleness for the checks actually run
+        fps = {e["fingerprint"]: e for e in baseline.raw}
+        stale = [fp for fp in stale
+                 if fps.get(fp, {}).get("check") in only]
     return Report(findings=findings, new=new, suppressed=suppressed,
                   stale=stale, pkg=pkg, table=table, graph=graph)
 
@@ -80,15 +92,24 @@ def run_analysis(roots: Optional[List[Path]] = None,
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro-lint",
-        description="Concurrency lint for the startup stack "
-                    "(lock order, blocking-under-lock, leaks).")
+        description="Concurrency + I/O-discipline lint for the startup "
+                    "stack (lock order, blocking-under-lock, leaks, "
+                    "priority dataflow, scheduler/accounting coverage).")
     ap.add_argument("--root", action="append", type=Path, default=None,
                     help="source root(s) to lint (default: src/repro)")
     ap.add_argument("--baseline", type=Path, default=None,
                     help="known-good baseline JSON; only NEW findings fail")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="rewrite the baseline from current findings, "
-                         "keeping existing justifications")
+                    help="rewrite the baseline from current findings: "
+                         "stale entries are pruned, existing "
+                         "justifications kept")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="CHECK",
+                    help="run only this checker (repeatable), e.g. "
+                         "--only unscheduled-io")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="output format; json prints the full report "
+                         "to stdout")
     ap.add_argument("--report", type=Path, default=None,
                     help="write the full JSON report here (CI artifact)")
     ap.add_argument("--include-analysis", action="store_true",
@@ -98,7 +119,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     rep = run_analysis(roots=args.root, baseline_path=args.baseline,
-                       include_analysis=args.include_analysis)
+                       include_analysis=args.include_analysis,
+                       only=args.only)
 
     if args.report:
         args.report.write_text(json.dumps(rep.to_dict(), indent=2) + "\n")
@@ -106,10 +128,22 @@ def main(argv: Optional[List[str]] = None) -> int:
         if args.baseline is None:
             print("--write-baseline requires --baseline", file=sys.stderr)
             return 2
-        Baseline.load(args.baseline).save(args.baseline, rep.findings)
-        print(f"baseline rewritten: {len(rep.findings)} suppression(s) "
-              f"-> {args.baseline}")
+        base = Baseline.load(args.baseline)
+        keep = None
+        if args.only:
+            # scoped rewrite: leave other checkers' entries untouched
+            keep = [e for e in base.raw
+                    if e.get("check") not in set(args.only)]
+        base.save(args.baseline, rep.findings, keep=keep)
+        pruned = len(rep.stale)
+        print(f"baseline rewritten: {len(rep.findings)} suppression(s), "
+              f"{pruned} stale entr{'y' if pruned == 1 else 'ies'} "
+              f"pruned -> {args.baseline}")
         return 0
+
+    if args.format == "json":
+        print(json.dumps(rep.to_dict(), indent=2))
+        return 1 if rep.new else 0
 
     print(f"repro-lint: {len(rep.findings)} finding(s), "
           f"{len(rep.suppressed)} baselined, {len(rep.new)} new; "
@@ -122,7 +156,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             print("baselined " + f.format())
     for fp in rep.stale:
         print(f"warning: stale baseline entry {fp} (finding no longer "
-              f"produced — remove it)")
+              f"produced — run --write-baseline to prune)")
     return 1 if rep.new else 0
 
 

@@ -47,7 +47,13 @@ def _caller_site(depth: int = 2) -> Optional[Site]:
     i = fname.rfind("src/repro/")
     if i < 0:
         return None
-    return (fname[i:], f.f_lineno)
+    site_file = fname[i:]
+    # the analysis package is the instrumentation, not the startup
+    # stack under verification (repro-lint likewise excludes it): the
+    # io-witness Recorder's own lock must not show up as an edge
+    if site_file.startswith("src/repro/analysis/"):
+        return None
+    return (site_file, f.f_lineno)
 
 
 class Recorder:

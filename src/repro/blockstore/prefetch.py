@@ -29,6 +29,32 @@ from typing import Optional
 
 from repro.blockstore.lazy import LazyImageClient
 
+# process-wide fallback executors for callers that don't pass their own
+# ``pool``: spawning a fresh ThreadPoolExecutor per prefetch put thread
+# creation on the startup critical path.  Hot and cold phases get
+# SEPARATE pools so a previous run's cold remainder can never queue
+# ahead of a later run's hot prefetch in the executor itself (the same
+# isolation BootseerRuntime keeps with its _io_pool/_cold_pool pair).
+# Sized on first use; the per-block IOScheduler tokens (not the pool
+# width) bound actual storage concurrency.
+_POOL_LOCK = threading.Lock()
+_HOT_POOL: Optional[ThreadPoolExecutor] = None
+_COLD_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _fallback_pool(phase: str, threads: int) -> ThreadPoolExecutor:
+    global _HOT_POOL, _COLD_POOL
+    with _POOL_LOCK:
+        if phase == "hot":
+            if _HOT_POOL is None:
+                _HOT_POOL = ThreadPoolExecutor(
+                    threads, thread_name_prefix="blk-prefetch-hot")
+            return _HOT_POOL
+        if _COLD_POOL is None:
+            _COLD_POOL = ThreadPoolExecutor(
+                threads, thread_name_prefix="blk-prefetch-cold")
+        return _COLD_POOL
+
 
 class HotBlockService:
     """Central record store: image digest -> evolving hot block scores.
@@ -128,8 +154,11 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
     Returns ``(hot_seconds, cold_handle)``.  After the blocking phase the
     container can start: every startup-critical block is local.
 
-    ``pool``: optional long-lived executor shared across nodes/runs so the
-    per-prefetch thread-spawn cost disappears from the critical path.
+    ``pool``: optional long-lived executor shared across nodes/runs.
+    Without one, process-wide fallback pools are used (one hot, one
+    cold) — no caller ever pays thread-spawn cost on the critical path;
+    ``hot_threads``/``cold_threads`` size the fallback pools on first
+    use.
 
     ``defer_cold=True`` keeps the cold remainder ENTIRELY off the startup
     critical path: nothing is scanned, spawned or fetched here; instead
@@ -153,10 +182,8 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
     elif len(hot) == 1:
         client.ensure_block(hot[0])
     elif hot:
-        # never spawn more threads than blocks — thread creation is pure
-        # overhead for small hot sets
-        with ThreadPoolExecutor(min(hot_threads, len(hot))) as ex:
-            list(ex.map(client.ensure_block, hot))
+        ex = _fallback_pool("hot", hot_threads)
+        list(ex.map(client.ensure_block, hot))
     hot_s = time.perf_counter() - t0
     hot_set = set(hot)
 
@@ -191,11 +218,9 @@ def prefetch_image(client: LazyImageClient, service: HotBlockService, *,
             # rarest-first ordering scans the availability index once per
             # block — do it on the streaming side, never on the critical
             # path between the hot phase and returning to the caller
-            if pool is not None:
-                list(pool.map(ensure_cold, cold_order(cold)))
-            else:
-                with ThreadPoolExecutor(min(cold_threads, len(cold))) as ex:
-                    list(ex.map(ensure_cold, cold_order(cold)))
+            ex = pool if pool is not None \
+                else _fallback_pool("cold", cold_threads)
+            list(ex.map(ensure_cold, cold_order(cold)))
         if background_cold:
             bg = threading.Thread(target=stream, daemon=True)
             bg.start()

@@ -25,6 +25,8 @@ for full and delta steps.
 
 from __future__ import annotations
 
+import os
+import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
@@ -39,6 +41,24 @@ from repro.ckpt.plan import (RestorePlan, build_restore_plan,
 from repro.core.pipeline import CRITICAL, DEFERRED
 from repro.dfs.hdfs import HdfsCluster
 from repro.dfs.striped import StripedReader, StripedWriter
+
+
+# shared async-tail executor: restore_planned used to spawn a fresh
+# single-thread ThreadPoolExecutor per call, putting thread creation on
+# every resume.  One lazily-created process-wide pool serves all tails;
+# it is never shut down (daemon-like, lives for the process).
+_TAIL_LOCK = threading.Lock()
+_TAIL_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _tail_pool() -> ThreadPoolExecutor:
+    global _TAIL_POOL
+    with _TAIL_LOCK:
+        if _TAIL_POOL is None:
+            _TAIL_POOL = ThreadPoolExecutor(
+                max(2, min(8, os.cpu_count() or 2)),
+                thread_name_prefix="ckpt-tail")
+        return _TAIL_POOL
 
 
 def _flat_with_names(tree: Any) -> list[tuple[str, Any]]:
@@ -256,9 +276,19 @@ class Checkpointer:
 
     # ----- restore -----
 
-    def load_index(self, step: int) -> TensorIndex:
-        return TensorIndex.from_json(
-            self.hdfs.read(self.index_path(step)).decode())
+    def load_index(self, step: int, *, sched=None,
+                   priority: int = CRITICAL) -> TensorIndex:
+        """Read the manifest for ``step``.  With ``sched`` the read runs
+        under a "dfs" slot token (it gates every restore, so it competes
+        for DFS capacity like any other startup read) and its bytes land
+        in the scheduler's per-priority counters."""
+        if sched is None:
+            raw = self.hdfs.read(self.index_path(step))
+        else:
+            with sched.slot("dfs", priority=priority):
+                raw = self.hdfs.read(self.index_path(step))
+            sched.account("dfs", priority, len(raw))
+        return TensorIndex.from_json(raw.decode())
 
     def _file_reader(self, path: str, *, sched=None, priority: int = 0):
         attrs = self.hdfs.attrs(path)
@@ -268,13 +298,14 @@ class Checkpointer:
         return _PlainReader(self.hdfs, path, sched=sched, priority=priority)
 
     def _delta_chain(self, step: int,
-                     index: Optional[TensorIndex] = None) -> list:
+                     index: Optional[TensorIndex] = None,
+                     sched=None) -> list:
         """``[(step, index), ...]`` along ``step``'s delta chain, base
         (full snapshot) first.  Raises on a cycle in the chain metadata."""
         chain = []
         seen: set[int] = set()
         cur, idx = step, (index if index is not None
-                          else self.load_index(step))
+                          else self.load_index(step, sched=sched))
         while True:
             if cur in seen:
                 raise ValueError(f"delta chain cycle at step {cur}")
@@ -283,7 +314,7 @@ class Checkpointer:
             if not idx.is_delta:
                 break
             cur = idx.base_step
-            idx = self.load_index(cur)
+            idx = self.load_index(cur, sched=sched)
         chain.reverse()
         return chain
 
@@ -301,7 +332,7 @@ class Checkpointer:
         if self.hdfs.exists(self.data_path(step)):
             return self._file_reader(self.data_path(step), sched=sched,
                                      priority=priority)
-        chain = self._delta_chain(step, index=index)
+        chain = self._delta_chain(step, index=index, sched=sched)
         base_step, base_index = chain[0]
         if not self.hdfs.exists(self.data_path(base_step)):
             raise FileNotFoundError(
@@ -364,7 +395,7 @@ class Checkpointer:
 
     def plan_restore(self, step: int, *likes: Any, specs=None, rules=None,
                      axis_sizes=None, coords=None,
-                     shard_slices: Optional[dict] = None,
+                     shard_slices: Optional[dict] = None, sched=None,
                      **plan_kw) -> tuple[TensorIndex, list[RestorePlan]]:
         """Build this host's restore plan for ``step``: one ``RestorePlan``
         per wave (params, then optimizer state).
@@ -376,7 +407,7 @@ class Checkpointer:
         legacy ``shard_slices`` ``{tensor_name: (start_row, n_rows)}``
         leading-dim form.  With neither, the full checkpoint is planned.
         """
-        index = self.load_index(step)
+        index = self.load_index(step, sched=sched)
         slices = self._dim_slices(index, likes, specs=specs, rules=rules,
                                   axis_sizes=axis_sizes, coords=coords,
                                   shard_slices=shard_slices)
@@ -429,7 +460,8 @@ class Checkpointer:
         """
         index, plans = self.plan_restore(
             step, *likes, specs=specs, rules=rules, axis_sizes=axis_sizes,
-            coords=coords, shard_slices=shard_slices, **plan_kw)
+            coords=coords, shard_slices=shard_slices, sched=sched,
+            **plan_kw)
         reader = self._reader(step, sched=sched, priority=priority,
                               index=index)
         results = (self._execute_wave(reader, plans[0], priority=priority)
@@ -452,10 +484,7 @@ class Checkpointer:
             fut: Future = Future()
             fut.set_result(())
             return first, fut
-        pool = ThreadPoolExecutor(1, thread_name_prefix="ckpt-tail")
-        fut = pool.submit(_tail)
-        pool.shutdown(wait=False)   # the queued tail still completes
-        return first, fut
+        return first, _tail_pool().submit(_tail)
 
     def restore(self, step: int, *likes: Any,
                 shard_slices: Optional[dict] = None, sched=None,

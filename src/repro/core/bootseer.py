@@ -577,7 +577,7 @@ def _restore_plans(checkpointer, step: int, *, rank: int, nodes: int,
     from repro.ckpt.plan import plan_for_rank
     from repro.fabric.cache import CachedRangeReader
 
-    index = checkpointer.load_index(step)
+    index = checkpointer.load_index(step, sched=sched)
     reader = checkpointer._reader(step, sched=sched, index=index)
     if cache is not None:
         reader = CachedRangeReader(reader, cache,

@@ -4,6 +4,13 @@ The paper mounts remote HDFS directories into worker containers via a FUSE
 sidecar; kernel mounts are unavailable in this sandbox, so the "mount" is an
 object exposing ``open(path)`` -> file-like handles.  Striped files
 transparently get the parallel reader.
+
+A mount may carry an ``IOScheduler`` (``sched=``): every pread — striped
+or plain — then runs under a "dfs" slot token at the mount's default
+``priority``, overridable per read.  Leave ``sched`` unset when a higher
+layer already meters the reads (e.g. ``EnvCache`` passes its own
+scheduler) — nesting two "dfs" slot acquisitions on one thread would
+double-count and risk token starvation.
 """
 
 from __future__ import annotations
@@ -25,7 +32,8 @@ class HdfsFuseFile:
         meta = mount.hdfs.attrs(path)
         if "striped" in meta:
             self._reader: Optional[StripedReader] = StripedReader(
-                mount.hdfs, path)
+                mount.hdfs, path, sched=mount.sched,
+                priority=mount.priority)
             self._size = self._reader.size
         else:
             self._reader = None
@@ -46,21 +54,31 @@ class HdfsFuseFile:
     def tell(self) -> int:
         return self._pos
 
-    def pread(self, offset: int, length: int) -> bytes:
-        if self._reader is not None:
-            return self._reader.pread(offset, length)
-        return self._mount.hdfs.pread(self.path, offset, length)
+    def pread(self, offset: int, length: int, priority=None) -> bytes:
+        """Single positional read.  Delegates to ``pread_many`` so the
+        scheduling class survives — ``pread`` used to drop it while its
+        batched sibling forwarded it, and single-range callers silently
+        lost their priority."""
+        return self.pread_many([(offset, length)], priority=priority)[0]
 
     def pread_many(self, ranges, into=None, priority=None):
         """Batched ranged reads (see ``StripedReader.pread_many``).  Plain
-        files fall back to per-range preads with the same return contract."""
+        files fall back to per-range preads with the same return contract,
+        metered under the mount's scheduler when it has one."""
         if self._reader is not None:
             return self._reader.pread_many(ranges, into=into,
                                            priority=priority)
         from repro.dfs.striped import pread_many_fallback
-        return pread_many_fallback(
-            lambda off, ln: self._mount.hdfs.pread(self.path, off, ln),
-            ranges, into=into)
+        sched = self._mount.sched
+        if sched is None:
+            return pread_many_fallback(self._pread_raw, ranges, into=into)
+        prio = self._mount.priority if priority is None else priority
+        nbytes = sum(max(0, ln) for _, ln in ranges)
+        with sched.slot("dfs", priority=prio, nbytes=nbytes):
+            return pread_many_fallback(self._pread_raw, ranges, into=into)
+
+    def _pread_raw(self, offset: int, length: int) -> bytes:
+        return self._mount.hdfs.pread(self.path, offset, length)
 
     def read(self, length: int = -1) -> bytes:
         if length < 0:
@@ -82,9 +100,12 @@ class HdfsFuseFile:
 class HdfsFuseMount:
     """The 'mounted directory': open() remote paths as local file objects."""
 
-    def __init__(self, hdfs: HdfsCluster, prefix: str = ""):
+    def __init__(self, hdfs: HdfsCluster, prefix: str = "", *,
+                 sched=None, priority: int = 0):
         self.hdfs = hdfs
         self.prefix = prefix.rstrip("/")
+        self.sched = sched
+        self.priority = priority
 
     def _full(self, path: str) -> str:
         return f"{self.prefix}/{path.lstrip('/')}" if self.prefix else path

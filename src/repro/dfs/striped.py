@@ -519,20 +519,26 @@ class StripedReader:
         except FileNotFoundError as e:
             raise StripeMissingError(self.path, file_index=f,
                                      group=group, name=name) from e
-        with h:
-            for off, ln, i, dst in subs:
-                h.seek(off)
-                got = h.readinto(views[i][dst:dst + ln])
-                if got != ln:
-                    raise StripeMissingError(
-                        self.path, file_index=f, group=group, name=name,
-                        detail=f"truncated (wanted {ln} bytes at offset "
-                               f"{off}, got {got})")
-                n += ln
-        self.hdfs.account_read(n)
-        if self.hdfs.throttle:
-            with self.hdfs.throttle:
-                self.hdfs.throttle.charge(n)
+        # accounting in finally: a truncated attempt has already moved
+        # its partial bytes off the DataNode, and replica retries repeat
+        # the cost — failed attempts bill like successful ones
+        try:
+            with h:
+                for off, ln, i, dst in subs:
+                    h.seek(off)
+                    got = h.readinto(views[i][dst:dst + ln])
+                    n += max(0, int(got or 0))
+                    if got != ln:
+                        raise StripeMissingError(
+                            self.path, file_index=f, group=group, name=name,
+                            detail=f"truncated (wanted {ln} bytes at offset "
+                                   f"{off}, got {got})")
+        finally:
+            if n:
+                self.hdfs.account_read(n)
+                if self.hdfs.throttle:
+                    with self.hdfs.throttle:
+                        self.hdfs.throttle.charge(n)
 
     # ----- erasure path -------------------------------------------------
 
@@ -581,24 +587,30 @@ class StripedReader:
             except FileNotFoundError as e:
                 raise StripeMissingError(self.path, file_index=f_idx,
                                          group=group, name=name) from e
-            with h:
-                for run in runs:
-                    buf = np.empty(len(run) * chunk, np.uint8)
-                    h.seek(run[0] * chunk)
-                    got = h.readinto(memoryview(buf))
-                    if got != len(buf):
-                        raise StripeMissingError(
-                            self.path, file_index=f_idx, group=group,
-                            name=name,
-                            detail=f"truncated (wanted {len(buf)} bytes at "
-                                   f"offset {run[0] * chunk}, got {got})")
-                    n += len(buf)
-                    for j, r in enumerate(run):
-                        chunks[r] = buf[j * chunk:(j + 1) * chunk]
-            self.hdfs.account_read(n)
-            if self.hdfs.throttle:
-                with self.hdfs.throttle:
-                    self.hdfs.throttle.charge(n)
+            # bill in finally: a truncation detected mid-run has already
+            # moved its partial bytes (same discipline as _read_subs)
+            try:
+                with h:
+                    for run in runs:
+                        buf = np.empty(len(run) * chunk, np.uint8)
+                        h.seek(run[0] * chunk)
+                        got = h.readinto(memoryview(buf))
+                        n += max(0, int(got or 0))
+                        if got != len(buf):
+                            raise StripeMissingError(
+                                self.path, file_index=f_idx, group=group,
+                                name=name,
+                                detail=f"truncated (wanted {len(buf)} bytes "
+                                       f"at offset {run[0] * chunk}, "
+                                       f"got {got})")
+                        for j, r in enumerate(run):
+                            chunks[r] = buf[j * chunk:(j + 1) * chunk]
+            finally:
+                if n:
+                    self.hdfs.account_read(n)
+                    if self.hdfs.throttle:
+                        with self.hdfs.throttle:
+                            self.hdfs.throttle.charge(n)
         if self.placement.verify and crcs is not None:
             for r in disk_rows:
                 if r < len(crcs) and zlib.crc32(chunks[r]) != crcs[r]:

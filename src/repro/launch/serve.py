@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.blockstore.registry import Registry
+from repro.ckpt.checkpoint import Checkpointer
 from repro.configs import ARCHS, get_tiny
 from repro.core.bootseer import BootseerRuntime, JobSpec
 from repro.core.stages import Stage
@@ -66,9 +67,24 @@ def main():
 
     cfg = get_tiny(args.arch)
     model = Model(cfg, single_device_rules())
-    params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, batch=args.batch,
-                         cache_len=args.cache_len)
+    # serving params live in a checkpoint: the first invocation seeds it,
+    # warm restarts restore through the planned path under the runtime's
+    # IOScheduler at CRITICAL (params gate time-to-first-token) — the
+    # same discipline the training startup DAG uses, instead of the old
+    # fresh init on every boot.
+    ckpt = Checkpointer(hdfs, f"/serve_ckpt/{args.arch}")
+    if ckpt.latest_step() is None:
+        params = model.init(jax.random.key(0))
+        ckpt.save(0, params)
+        print("serve params: seeded checkpoint step 0")
+    engine = ServeEngine.from_checkpoint(
+        model, ckpt, batch=args.batch, cache_len=args.cache_len,
+        sched=rt.io_sched)
+    if rt.io_sched is not None:
+        dfs = rt.io_sched.snapshot().get("dfs", {})
+        print(f"serve params: planned restore read "
+              f"{dfs.get('bytes', {}).get('critical', 0)} bytes at "
+              "CRITICAL")
 
     rng = np.random.default_rng(0)
     todo = [Request(prompt=rng.integers(0, cfg.vocab_size,

@@ -35,6 +35,31 @@ class ServeEngine:
         self._prefill = jit_prefill(model, batch, cache_len)
         self._decode = jit_decode_step(model, batch, cache_len)
 
+    @classmethod
+    def from_checkpoint(cls, model: Model, checkpointer, step=None, *,
+                        batch: int, cache_len: int, sched=None,
+                        priority=None) -> "ServeEngine":
+        """Build an engine whose params come from a checkpoint via the
+        planned restore path — ``restore_planned(sched=, priority=
+        CRITICAL)`` — instead of a raw reader: serving cold-starts are
+        exactly the startup I/O the IOScheduler exists to arbitrate, so
+        a replica booting under load competes for DFS tokens at CRITICAL
+        (params gate time-to-first-token) rather than bypassing the
+        scheduler.  Params-only: no optimizer wave is planned or read.
+        """
+        from repro.core.pipeline import CRITICAL
+        if step is None:
+            step = checkpointer.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    "from_checkpoint: no checkpoint steps found under "
+                    f"{checkpointer.base!r}")
+        like = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        (params,) = checkpointer.restore_planned(
+            step, like, sched=sched,
+            priority=CRITICAL if priority is None else priority)
+        return cls(model, params, batch=batch, cache_len=cache_len)
+
     def generate(self, requests: list[Request], seed: int = 0) -> list[Request]:
         assert len(requests) <= self.batch
         # pad the request list to the engine batch

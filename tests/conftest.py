@@ -8,40 +8,73 @@ def pytest_addoption(parser):
         help="instrument threading locks constructed in src/repro and "
              "cross-check observed acquisition orders against the static "
              "lock-order graph (repro-lint) at session end")
+    parser.addoption(
+        "--io-witness", action="store_true", default=False,
+        help="instrument the DFS layer and IOScheduler, reconcile observed "
+             "bytes against scheduler/accounting counters at session end, "
+             "and fail on unaccounted bytes or observed priority inversion")
 
 
 def pytest_configure(config):
     if config.getoption("--lock-witness"):
         from repro.analysis import witness
         witness.install()
+    if config.getoption("--io-witness"):
+        from repro.analysis import iowitness
+        iowitness.install()
 
 
 def pytest_sessionfinish(session, exitstatus):
     config = session.config
-    if not config.getoption("--lock-witness"):
-        return
-    from repro.analysis import witness
-    witness.uninstall()
-    report = witness.cross_check()
     tr = config.pluginmanager.get_plugin("terminalreporter")
     out = tr.write_line if tr is not None else print
-    out("")
-    out(f"[lock-witness] {report['locks_witnessed']} lock site(s) "
-        f"witnessed, {len(report['observed_edges'])} observed "
-        f"edge(s)")
-    for e in report["static_gap"]:
-        out(f"[lock-witness] static gap (observed, not predicted): {e}")
-    for e in report["possibly_stale"]:
-        out(f"[lock-witness] possibly stale (predicted, never "
-            f"observed): {e}")
-    for s in report["same_site_nesting"]:
-        out(f"[lock-witness] same-site nesting (per-key locks from one "
-            f"site nested; order discipline unverifiable): {s}")
-    if report["cycles"]:
-        for cyc in report["cycles"]:
-            out(f"[lock-witness] OBSERVED LOCK-ORDER CYCLE: "
-                f"{' -> '.join(cyc + [cyc[0]])}")
-        session.exitstatus = 1
+    if config.getoption("--lock-witness"):
+        from repro.analysis import witness
+        witness.uninstall()
+        report = witness.cross_check()
+        out("")
+        out(f"[lock-witness] {report['locks_witnessed']} lock site(s) "
+            f"witnessed, {len(report['observed_edges'])} observed "
+            f"edge(s)")
+        for e in report["static_gap"]:
+            out(f"[lock-witness] static gap (observed, not predicted): {e}")
+        for e in report["possibly_stale"]:
+            out(f"[lock-witness] possibly stale (predicted, never "
+                f"observed): {e}")
+        for s in report["same_site_nesting"]:
+            out(f"[lock-witness] same-site nesting (per-key locks from one "
+                f"site nested; order discipline unverifiable): {s}")
+        if report["cycles"]:
+            for cyc in report["cycles"]:
+                out(f"[lock-witness] OBSERVED LOCK-ORDER CYCLE: "
+                    f"{' -> '.join(cyc + [cyc[0]])}")
+            session.exitstatus = 1
+    if config.getoption("--io-witness"):
+        from repro.analysis import iowitness
+        iowitness.uninstall()
+        rep = iowitness.reconcile()
+        out("")
+        out(f"[io-witness] observed read {rep['observed_read']} B / "
+            f"accounted {rep['accounted_read']} B; observed write "
+            f"{rep['observed_write']} B / accounted "
+            f"{rep['accounted_write']} B; {rep['slot_grants']} slot "
+            f"grant(s), sched bytes {rep['sched_bytes']}")
+        if rep["unaccounted_read"]:
+            out(f"[io-witness] UNACCOUNTED READ BYTES: "
+                f"{rep['unaccounted_read']}")
+            for s in rep["top_read_sites"]:
+                out(f"[io-witness]   read site {s['file']}:{s['line']} "
+                    f"({s.get('function', '?')}) moved {s['bytes']} B")
+        if rep["unaccounted_write"]:
+            out(f"[io-witness] UNACCOUNTED WRITE BYTES: "
+                f"{rep['unaccounted_write']}")
+        for inv in rep["inversions"]:
+            out(f"[io-witness] OBSERVED PRIORITY INVERSION on "
+                f"{inv['resource']}: {inv['priority']} granted behind "
+                f"{inv['behind']} after {inv['waited_s']}s "
+                f"({inv.get('function', inv.get('site'))})")
+        if not rep["ok"]:
+            session.exitstatus = 1
 
 
 @pytest.fixture(scope="session")

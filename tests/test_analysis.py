@@ -1,10 +1,12 @@
-"""Concurrency lint (repro.analysis): fixture corpus, baseline
-mechanics, runtime witness, and the repo-wide clean-run guarantee.
+"""Concurrency + I/O-discipline lint (repro.analysis): fixture corpus,
+baseline mechanics, runtime witnesses, CLI, and the repo-wide
+clean-run guarantee.
 
 Each known-bad fixture must trip EXACTLY its one checker — a fixture
 tripping two means the checkers overlap; tripping zero means a
 regression in extraction.  Known-good fixtures pin the idioms the
-linter must never flag (try/finally release, retire-after-singleflight).
+linter must never flag (try/finally release, retire-after-singleflight,
+layer-level slot metering, module-singleton executor pools).
 """
 
 import textwrap
@@ -16,6 +18,7 @@ import pytest
 from repro.analysis import Package, fingerprint, run_analysis
 from repro.analysis.baseline import Baseline, Finding
 from repro.analysis.checks import run_checks
+from repro.analysis.iochecks import run_io_checks
 from repro.analysis.lockorder import build_lock_order, scc_cycles
 from repro.analysis.locks import collect_locks
 
@@ -28,7 +31,7 @@ def lint_source(tmp_path, src, name="mod"):
     pkg = Package.load([f], package_root=tmp_path)
     table = collect_locks(pkg)
     graph = build_lock_order(pkg, table)
-    return run_checks(pkg, table, graph), graph
+    return run_checks(pkg, table, graph) + run_io_checks(pkg), graph
 
 
 class TestKnownBad:
@@ -353,6 +356,375 @@ class TestWitness:
             for n, v in saved.items():
                 setattr(threading, n, v)
             witness.RECORDER = old_rec
+
+
+class TestIOKnownBad:
+    def test_priority_drop_unused_param(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Loader:
+                def __init__(self, reader):
+                    self.reader = reader
+
+                def load(self, path, priority=None):
+                    return self.reader.read_all()
+        """)
+        assert [f.check for f in findings] == ["io-priority-drop"]
+        assert "'priority'" in findings[0].detail
+        assert findings[0].function.endswith("Loader.load")
+
+    def test_priority_drop_reader_without_sched(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Opener:
+                def open(self, hdfs, path, sched=None):
+                    if sched is None:
+                        pass
+                    return StripedReader(hdfs, path)
+        """)
+        assert [f.check for f in findings] == ["io-priority-drop"]
+        assert "StripedReader" in findings[0].detail
+
+    def test_unscheduled_io_from_startup_task(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Rt:
+                def __init__(self, hdfs):
+                    self.hdfs = hdfs
+
+                def _node_tasks(self):
+                    def img_reads():
+                        return self.hdfs.pread("p", 0, 4)
+                    return [img_reads]
+        """)
+        assert [f.check for f in findings] == ["unscheduled-io"]
+        assert "'dfs'" in findings[0].detail
+        assert "img_reads" in findings[0].function
+
+    def test_unscheduled_io_propagates_through_helpers(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Rt:
+                def __init__(self, hdfs):
+                    self.hdfs = hdfs
+
+                def _node_tasks(self):
+                    def ckpt_params():
+                        return self._fetch()
+                    return [ckpt_params]
+
+                def _fetch(self):
+                    return self.hdfs.pread("p", 0, 4)
+        """)
+        assert [f.check for f in findings] == ["unscheduled-io"]
+        assert findings[0].chain, "propagated finding must carry a chain"
+
+    def test_accounting_gap(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Raw:
+                def slurp(self, dn):
+                    h = dn.open_group_file(0, "f", "rb")
+                    return h.read()
+        """)
+        assert [f.check for f in findings] == ["io-accounting-gap"]
+        assert findings[0].function.endswith("Raw.slurp")
+
+    def test_per_call_executor_on_startup_path(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            from concurrent.futures import ThreadPoolExecutor
+
+            class Rt:
+                def _node_tasks(self):
+                    def env_install():
+                        return self._spin()
+                    return [env_install]
+
+                def _spin(self):
+                    with ThreadPoolExecutor(4) as ex:
+                        return list(ex.map(str, [1]))
+        """)
+        assert [f.check for f in findings] == ["executor-hygiene"]
+        assert "per-call ThreadPoolExecutor" in findings[0].detail
+        assert findings[0].function.endswith("Rt._spin")
+
+    def test_untimed_result_on_startup_path(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Rt:
+                def __init__(self, pool):
+                    self.pool = pool
+
+                def _node_tasks(self):
+                    def ckpt_params():
+                        fu = self.pool.submit(str, 1)
+                        return fu.result()
+                    return [ckpt_params]
+        """)
+        assert [f.check for f in findings] == ["executor-hygiene"]
+        assert "untimed future.result()" in findings[0].detail
+
+
+class TestIOKnownGood:
+    def test_forwarded_priority_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Loader:
+                def __init__(self, reader):
+                    self.reader = reader
+
+                def load(self, path, priority=None):
+                    return self.reader.pread(0, 4, priority=priority)
+        """)
+        assert findings == []
+
+    def test_reader_with_sched_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Opener:
+                def open(self, hdfs, path, sched=None):
+                    return StripedReader(hdfs, path, sched=sched)
+        """)
+        assert findings == []
+
+    def test_slot_token_discharges_unscheduled_io(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Rt:
+                def __init__(self, hdfs, sched):
+                    self.hdfs = hdfs
+                    self.sched = sched
+
+                def _node_tasks(self):
+                    def img_reads():
+                        with self.sched.slot("dfs"):
+                            return self._fetch()
+                    return [img_reads]
+
+                def _fetch(self):
+                    return self.hdfs.pread("p", 0, 4)
+        """)
+        assert findings == []
+
+    def test_accounting_only_design_is_clean(self, tmp_path):
+        # the documented "peer" pattern: no slot token, post-hoc account
+        findings, _ = lint_source(tmp_path, """
+            class Rt:
+                def __init__(self, peers, sched):
+                    self.peers = peers
+                    self.sched = sched
+
+                def _node_tasks(self):
+                    def img_cold():
+                        data = self.peers.fetch("blk")
+                        self.sched.account("peer", 2, len(data))
+                        return data
+                    return [img_cold]
+        """)
+        assert findings == []
+
+    def test_sibling_method_accounting_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            class Split:
+                def open(self, dn):
+                    return dn.open_group_file(0, "f", "rb")
+
+                def bill(self, dn, n):
+                    dn.account_read(n)
+        """)
+        assert findings == []
+
+    def test_module_singleton_pool_is_clean(self, tmp_path):
+        findings, _ = lint_source(tmp_path, """
+            from concurrent.futures import ThreadPoolExecutor
+
+            _POOL = None
+
+            class Rt:
+                def _node_tasks(self):
+                    def env_install():
+                        return self._go()
+                    return [env_install]
+
+                def _go(self):
+                    global _POOL
+                    if _POOL is None:
+                        _POOL = ThreadPoolExecutor(2)
+                    fu = _POOL.submit(str, 1)
+                    return fu.result(timeout=30)
+        """)
+        assert findings == []
+
+
+class TestIOWitness:
+    def test_reconcile_flags_unaccounted_reads(self):
+        from repro.analysis import iowitness
+        rec = iowitness.Recorder()
+        rec.on_read(100, ("src/repro/dfs/striped.py", 1))
+        rec.on_accounted_read(40)
+        rep = iowitness.reconcile(rec, join_static=False)
+        assert not rep["ok"]
+        assert rep["unaccounted_read"] == 60
+        assert rep["top_read_sites"][0]["bytes"] == 100
+
+    def test_reconcile_balanced_is_ok(self):
+        from repro.analysis import iowitness
+        rec = iowitness.Recorder()
+        rec.on_read(100, None)
+        rec.on_accounted_read(100)
+        rec.on_write(7)
+        rec.on_accounted_write(7)
+        assert iowitness.reconcile(rec)["ok"]
+
+    def _grant(self, prio, enq, grant, wait):
+        return {"resource": "dfs", "priority": prio, "enq_seq": enq,
+                "grant_seq": grant, "enq_t": 0.0, "grant_t": wait,
+                "site": None}
+
+    def test_inversion_detected(self):
+        from repro.analysis import iowitness
+        # DEFERRED enqueued second but granted first; the CRITICAL
+        # request genuinely waited -> inversion
+        grants = [self._grant(2, enq=2, grant=3, wait=0.1),
+                  self._grant(0, enq=1, grant=4, wait=0.1)]
+        inv = iowitness.find_inversions(grants)
+        assert len(inv) == 1
+        assert inv[0]["priority"] == "critical"
+        assert inv[0]["behind"] == "deferred"
+
+    def test_fast_grant_is_not_an_inversion(self):
+        from repro.analysis import iowitness
+        # same grant order, but the CRITICAL side never really waited:
+        # that's the enqueue-stamp/heappush scheduling race, not a bug
+        grants = [self._grant(2, enq=2, grant=3, wait=0.1),
+                  self._grant(0, enq=1, grant=4, wait=0.001)]
+        assert iowitness.find_inversions(grants) == []
+
+    def test_priority_order_is_not_an_inversion(self):
+        from repro.analysis import iowitness
+        grants = [self._grant(0, enq=2, grant=3, wait=0.1),
+                  self._grant(2, enq=1, grant=4, wait=0.1)]
+        assert iowitness.find_inversions(grants) == []
+
+    def test_install_observes_and_balances(self, tmp_path):
+        from repro.analysis import iowitness
+        if iowitness._REAL:
+            pytest.skip("session-level --io-witness active")
+        from repro.dfs.hdfs import HdfsCluster
+        iowitness.install()
+        try:
+            hdfs = HdfsCluster(tmp_path / "h", num_groups=2,
+                               block_size=1 << 16)
+            hdfs.write("/f", b"x" * 1000)
+            assert hdfs.read("/f") == b"x" * 1000
+            rec = iowitness.RECORDER
+        finally:
+            iowitness.uninstall()
+        rep = iowitness.reconcile(rec)
+        assert rep["ok"]
+        assert rep["observed_read"] == 1000
+        assert rep["accounted_read"] == 1000
+
+    def test_raw_handle_bypass_is_unaccounted(self, tmp_path):
+        from repro.analysis import iowitness
+        if iowitness._REAL:
+            pytest.skip("session-level --io-witness active")
+        from repro.dfs.hdfs import HdfsCluster
+        iowitness.install()
+        try:
+            hdfs = HdfsCluster(tmp_path / "h", num_groups=2,
+                               block_size=1 << 16)
+            with hdfs.open_group_file(0, "raw.bin", "wb") as h:
+                h.write(b"y" * 300)
+            with hdfs.open_group_file(0, "raw.bin", "rb") as h:
+                assert h.read() == b"y" * 300
+            rec = iowitness.RECORDER
+        finally:
+            iowitness.uninstall()
+        rep = iowitness.reconcile(rec, join_static=False)
+        assert not rep["ok"]
+        assert rep["unaccounted_read"] == 300
+
+    def test_static_join_names_the_reader(self):
+        from repro.analysis import iowitness
+        src = (REPO / "src/repro/dfs/striped.py").read_text()
+        line = next(i for i, ln in enumerate(src.splitlines(), 1)
+                    if "def _read_subs" in ln) + 2
+        site = ("src/repro/dfs/striped.py", line)
+        joined = iowitness.site_functions([site])
+        assert joined[site].endswith("StripedReader._read_subs")
+
+
+class TestCLI:
+    # one lock finding + one io finding, distinguishable by --only
+    MIXED = """
+        import threading
+
+        DEAD = threading.Lock()
+
+        class Loader:
+            def __init__(self, reader):
+                self.reader = reader
+
+            def load(self, path, priority=None):
+                return self.reader.read_all()
+    """
+
+    def _root(self, tmp_path):
+        (tmp_path / "mod.py").write_text(textwrap.dedent(self.MIXED))
+        return tmp_path
+
+    def test_json_format_reports_both(self, tmp_path, capsys):
+        import json
+
+        from repro.analysis.cli import main
+        rc = main(["--root", str(self._root(tmp_path)),
+                   "--format", "json"])
+        rep = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert rep["summary"]["new"] == 2
+        assert {f["check"] for f in rep["new"]} == \
+            {"unused-lock", "io-priority-drop"}
+
+    def test_only_filters_to_one_checker(self, tmp_path, capsys):
+        import json
+
+        from repro.analysis.cli import main
+        rc = main(["--root", str(self._root(tmp_path)),
+                   "--only", "io-priority-drop", "--format", "json"])
+        rep = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert [f["check"] for f in rep["new"]] == ["io-priority-drop"]
+
+    def test_write_baseline_prunes_stale(self, tmp_path, capsys):
+        import json
+
+        from repro.analysis.cli import main
+        root = self._root(tmp_path)
+        bl = tmp_path / "bl.json"
+        bl.write_text(json.dumps({"suppressions": [
+            {"fingerprint": "feedfacefeedface", "check": "unused-lock",
+             "justification": "long gone"}]}))
+        rc = main(["--root", str(root), "--baseline", str(bl),
+                   "--write-baseline"])
+        assert rc == 0
+        data = json.loads(bl.read_text())
+        fps = {e["fingerprint"] for e in data["suppressions"]}
+        assert "feedfacefeedface" not in fps, "stale entry must be pruned"
+        assert {e["check"] for e in data["suppressions"]} == \
+            {"unused-lock", "io-priority-drop"}
+        # and the rewritten baseline makes the repo-rooted run clean
+        assert main(["--root", str(root), "--baseline", str(bl)]) == 0
+
+    def test_scoped_write_baseline_keeps_other_checkers(self, tmp_path,
+                                                        capsys):
+        import json
+
+        from repro.analysis.cli import main
+        root = self._root(tmp_path)
+        bl = tmp_path / "bl.json"
+        bl.write_text(json.dumps({"suppressions": [
+            {"fingerprint": "feedfacefeedface", "check": "unused-lock",
+             "justification": "someone else's"}]}))
+        main(["--root", str(root), "--baseline", str(bl),
+              "--write-baseline", "--only", "io-priority-drop"])
+        data = json.loads(bl.read_text())
+        fps = {e["fingerprint"] for e in data["suppressions"]}
+        # the out-of-scope (possibly stale) lock entry survives verbatim
+        assert "feedfacefeedface" in fps
+        assert any(e["check"] == "io-priority-drop"
+                   for e in data["suppressions"])
 
 
 class TestRepoIsClean:

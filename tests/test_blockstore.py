@@ -103,6 +103,32 @@ class TestRecordAndPrefetch:
         # cold streaming completed too (background_cold=False -> blocking)
         assert c1.cached_fraction() == 1.0
 
+    def test_fallback_pools_are_shared_singletons(self, image_env,
+                                                  tmp_path, monkeypatch):
+        # regression: prefetch_image used to construct a fresh
+        # ThreadPoolExecutor per call (hot AND cold), paying thread
+        # spawn on the startup critical path every boot
+        from repro.blockstore import prefetch as pf
+        _, reg, man, _ = image_env
+        svc = HotBlockService(tmp_path / "svc3")
+        c0 = LazyImageClient(man, reg, tmp_path / "w0")
+        c0.read_file("bin/start")
+        c0.read_file("lib.so", 0, 2 * BS)
+        svc.record(man.digest, c0.access_trace())
+
+        c1 = LazyImageClient(man, reg, tmp_path / "w1")
+        prefetch_image(c1, svc, background_cold=False)  # seeds the pools
+        assert pf._HOT_POOL is not None
+        hot, cold = pf._HOT_POOL, pf._COLD_POOL
+        # once seeded, no prefetch may ever construct another executor
+        monkeypatch.setattr(
+            pf, "ThreadPoolExecutor",
+            lambda *a, **k: pytest.fail("per-call executor constructed"))
+        c2 = LazyImageClient(man, reg, tmp_path / "w2")
+        prefetch_image(c2, svc, background_cold=False)
+        assert c2.cached_fraction() == 1.0
+        assert pf._HOT_POOL is hot and pf._COLD_POOL is cold
+
     def test_record_window_cut(self, tmp_path, image_env):
         _, reg, man, _ = image_env
         svc = HotBlockService(tmp_path / "svc2")

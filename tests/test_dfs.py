@@ -181,6 +181,43 @@ class TestFuse:
         assert m.exists("k.bin")
         assert m.open("k.bin").read() == b"zz"
 
+    def test_pread_forwards_priority_to_scheduler(self, hdfs):
+        # regression: pread used to drop the scheduling class its
+        # batched sibling forwarded — a single-range DEFERRED read
+        # silently ran (and billed) as if unscheduled
+        from repro.core.pipeline import CRITICAL, DEFERRED, IOScheduler
+        data = _payload(1 << 20)
+        write_striped(hdfs, "/ck", data, width=4)
+        sched = IOScheduler()
+        m = HdfsFuseMount(hdfs, sched=sched, priority=CRITICAL)
+        with m.open("/ck") as f:
+            assert f.pread(0, 4096, priority=DEFERRED) == data[:4096]
+        dfs = sched.snapshot()["dfs"]
+        assert dfs["bytes"]["deferred"] == 4096
+        assert dfs["bytes"]["critical"] == 0
+
+    def test_pread_defaults_to_mount_priority(self, hdfs):
+        from repro.core.pipeline import ELEVATED, IOScheduler
+        data = _payload(1 << 20)
+        write_striped(hdfs, "/ck", data, width=4)
+        sched = IOScheduler()
+        m = HdfsFuseMount(hdfs, sched=sched, priority=ELEVATED)
+        with m.open("/ck") as f:
+            assert f.pread(100, 200) == data[100:300]
+        assert sched.snapshot()["dfs"]["bytes"]["elevated"] == 200
+
+    def test_plain_file_pread_is_metered_too(self, hdfs):
+        # the non-striped fallback path takes the same slot token
+        from repro.core.pipeline import DEFERRED, IOScheduler
+        hdfs.write("/p", b"q" * 5000)
+        sched = IOScheduler()
+        m = HdfsFuseMount(hdfs, sched=sched)
+        with m.open("/p") as f:
+            assert f.pread(0, 1000, priority=DEFERRED) == b"q" * 1000
+        dfs = sched.snapshot()["dfs"]
+        assert dfs["bytes"]["deferred"] == 1000
+        assert dfs["acquires"] == 1
+
 
 def test_throttle_model_counts_concurrency():
     t = ThrottleModel(bandwidth=1e12, timescale=0.0)

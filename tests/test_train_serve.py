@@ -109,6 +109,50 @@ class TestServeEngine:
         assert len(out[0].generated) == 5
         assert len(out[1].generated) == 3
 
+    def test_from_checkpoint_restores_under_scheduler(self, rules,
+                                                      tmp_path):
+        """Serving params restore through the planned path at CRITICAL:
+        the engine built from a checkpoint generates identically to one
+        built from the in-memory params, and every byte of the restore
+        is visible to the scheduler at the right class."""
+        from repro.ckpt.checkpoint import Checkpointer
+        from repro.core.pipeline import IOScheduler
+        from repro.dfs.hdfs import HdfsCluster
+        from repro.serve.engine import Request, ServeEngine
+
+        model = Model(get_tiny("qwen2.5-3b"), rules)
+        params = model.init(jax.random.key(0))
+        hdfs = HdfsCluster(tmp_path / "h", num_groups=4,
+                           block_size=1 << 20)
+        ck = Checkpointer(hdfs, striped=True, width=4)
+        ck.save(3, params)
+
+        sched = IOScheduler()
+        eng = ServeEngine.from_checkpoint(model, ck, batch=2,
+                                          cache_len=64, sched=sched)
+        ref = ServeEngine(model, params, batch=2, cache_len=64)
+        prompt = np.arange(6, dtype=np.int32)
+        got = eng.generate([Request(prompt=prompt.copy(),
+                                    max_new_tokens=5)])[0].generated
+        want = ref.generate([Request(prompt=prompt.copy(),
+                                     max_new_tokens=5)])[0].generated
+        assert got == want
+        dfs = sched.snapshot()["dfs"]
+        assert dfs["bytes"]["critical"] > 0
+        assert dfs["bytes"]["deferred"] == 0
+
+    def test_from_checkpoint_without_steps_raises(self, rules, tmp_path):
+        from repro.ckpt.checkpoint import Checkpointer
+        from repro.dfs.hdfs import HdfsCluster
+        from repro.serve.engine import ServeEngine
+
+        model = Model(get_tiny("qwen2.5-3b"), rules)
+        hdfs = HdfsCluster(tmp_path / "h", num_groups=4,
+                           block_size=1 << 20)
+        ck = Checkpointer(hdfs, striped=True, width=4)
+        with pytest.raises(FileNotFoundError):
+            ServeEngine.from_checkpoint(model, ck, batch=2, cache_len=64)
+
     def test_greedy_matches_decode_loop(self, rules):
         """Engine output equals a hand-rolled prefill+decode loop."""
         from repro.serve.engine import Request, ServeEngine
