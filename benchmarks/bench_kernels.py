@@ -4,7 +4,10 @@ On this CPU container the Pallas kernels run in interpret mode (orders of
 magnitude slower than compiled TPU code — the numbers prove correctness and
 give a relative reference, not TPU performance)."""
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +20,7 @@ from repro.kernels.ssd import ssd_chunked_kernel
 from benchmarks.common import emit
 
 
-def run():
+def run(json_path=None):
     rows = []
     # flash attention
     b, hq, hkv, s, d = 1, 4, 2, 256, 64
@@ -48,8 +51,36 @@ def run():
     err = float(jnp.max(jnp.abs(y - y_ref)))
     rows.append(("kernels.ssd.max_err", f"{err:.2e}",
                  f"state_err {float(jnp.max(jnp.abs(st - st_ref))):.2e}"))
-    return emit(rows, "Pallas kernels (interpret mode) vs oracles")
+
+    # default vs tuned launch config: one small autotune sweep (the
+    # default is in the candidate set, so tuned <= default by argmin;
+    # bench_tune runs the full-size sweep + CI gate)
+    from repro.tune import TuningProfile, autotune
+    _, entry = autotune.tune_attention(
+        b=1, hq=2, hkv=1, sq=128, d=32, repeats=2, prune_keep=2,
+        profile=TuningProfile(backend="cpu-interpret"))
+    ratio = (entry["measured_s"] / entry["default_s"]
+             if entry["default_s"] else 1.0)
+    rows.append(("kernels.flash_attention.tuned_over_default",
+                 f"{ratio:.3f}",
+                 f"tuned {entry['config']} "
+                 f"{entry['measured_s'] * 1e3:.1f} ms vs default "
+                 f"{entry['default_s'] * 1e3:.1f} ms"))
+
+    emit(rows, "Pallas kernels (interpret mode) vs oracles")
+    if json_path:
+        Path(json_path).write_text(json.dumps(
+            [{"name": n, "value": v, "derived": d} for n, v, d in rows],
+            indent=2))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    run(json_path=args.json or None)
 
 
 if __name__ == "__main__":
-    run()
+    main()

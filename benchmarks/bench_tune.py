@@ -1,0 +1,144 @@
+"""Autotune benchmark: default-vs-tuned kernel configs + the boot-time
+profile cache (ROADMAP item 5 / ISSUE 9 acceptance).
+
+Two cells:
+
+  * default vs tuned — sweep the bench shapes through the autotuner and
+    compare the winner's measured time against the hardcoded default
+    measured in the SAME sweep (identical machine load).  The default is
+    always in the candidate set, so tuned/default <= 1.0 by argmin
+    construction; ``--max-ratio`` turns that into a CI gate.
+  * boot profile cache — a real two-boot BootseerRuntime round trip:
+    the cold boot sweeps + publishes, the warm boot must fetch the
+    profile with ZERO tuning invocations
+    (``StartupResult.notes["tune_cache_hit"]``).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_tune --json out.json
+    PYTHONPATH=src python -m benchmarks.bench_tune --max-ratio 1.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+# interpret-mode sweeps at the bench shapes take O(seconds) per
+# candidate; keep the pruned pool small so the cell stays CI-sized
+SWEEP = [
+    {"kernel": "flash_attention", "b": 1, "hq": 4, "hkv": 2, "sq": 256,
+     "d": 64, "prune_keep": 3},
+    {"kernel": "ssd", "b": 1, "s": 256, "h": 4, "p": 64, "n": 64,
+     "prune_keep": 3},
+]
+
+
+def _sweep_cells(rows: list, report: dict, repeats: int) -> float:
+    from repro.tune import TuningProfile, autotune
+
+    worst = 0.0
+    prof = TuningProfile(backend="cpu-interpret")
+    for wl in SWEEP:
+        key, entry = autotune.tune_workload(dict(wl), profile=prof,
+                                            repeats=repeats)
+        tuned, default = entry["measured_s"], entry["default_s"]
+        ratio = tuned / default if default else 1.0
+        worst = max(worst, ratio)
+        report[wl["kernel"]] = {"key": key, **entry, "ratio": ratio}
+        rows.append((
+            f"tune.{wl['kernel']}.tuned_over_default", f"{ratio:.3f}",
+            f"tuned {entry['config']} {tuned * 1e3:.1f} ms vs default "
+            f"{default * 1e3:.1f} ms ({entry['measured']} measured of "
+            f"{entry['candidates']} candidates)"))
+    return worst
+
+
+def _boot_cell(rows: list, report: dict) -> None:
+    import numpy as np
+
+    from repro.blockstore.image import build_image
+    from repro.blockstore.registry import Registry
+    from repro.core.bootseer import BootseerRuntime, JobSpec
+    from repro.dfs.hdfs import HdfsCluster
+
+    tmp = Path(tempfile.mkdtemp(prefix="bench_tune_"))
+    src = tmp / "src"
+    (src / "bin").mkdir(parents=True)
+    rng = np.random.default_rng(0)
+    (src / "bin" / "start").write_bytes(
+        rng.integers(0, 256, 64 * 1024, dtype=np.uint8).tobytes())
+    reg = Registry(tmp / "reg")
+    build_image(src, reg, "img", block_size=64 * 1024)
+    hdfs = HdfsCluster(tmp / "hdfs", num_groups=4, block_size=1 << 20)
+    spec = JobSpec(job_id="tunebench", image="img", num_nodes=2,
+                   job_params={"deps": ["a==1"]},
+                   startup_reads=[("bin/start", 0, -1)],
+                   env_setup=lambda target, rank:
+                       (target / "dep.py").write_text("x=1"))
+    with BootseerRuntime(registry=reg, hdfs=hdfs, workdir=tmp / "wd",
+                         optimize=True, tune=True) as rt:
+        t0 = time.perf_counter()
+        r1 = rt.run_startup(spec)
+        cold_s = time.perf_counter() - t0
+        rt.drain_deferred()
+        t0 = time.perf_counter()
+        r2 = rt.run_startup(spec)
+        warm_s = time.perf_counter() - t0
+        rt.drain_deferred()
+        store_stats = dict(rt.tune_store.stats)
+    for res, want_hit in ((r1, False), (r2, True)):
+        hit = res.notes.get("tune_cache_hit")
+        inv = res.notes.get("tune_invocations")
+        if hit is not want_hit or (want_hit and inv != 0) \
+                or (not want_hit and not inv):
+            raise SystemExit(
+                f"TUNE CACHE MISMATCH run{res.run_idx}: "
+                f"hit={hit} invocations={inv} (wanted hit={want_hit}, "
+                f"{'zero' if want_hit else 'nonzero'} invocations); "
+                f"notes={res.notes.get('tune_error')}")
+    report["boot"] = {
+        "cold_s": cold_s, "warm_s": warm_s,
+        "cold_invocations": r1.notes["tune_invocations"],
+        "digest": r1.notes.get("tune_profile_digest"),
+        "store": store_stats}
+    rows.append(("tune.boot_cache_hit", 1,
+                 f"cold boot swept ({r1.notes['tune_invocations']} "
+                 f"invocations, {cold_s:.1f} s); warm boot fetched the "
+                 f"profile with 0 invocations ({warm_s:.2f} s)"))
+
+
+def run(json_path=None, max_ratio=None, repeats: int = 2):
+    rows: list = []
+    report: dict = {}
+    worst = _sweep_cells(rows, report, repeats)
+    _boot_cell(rows, report)
+    emit(rows, "Kernel autotuning: default vs tuned + boot profile cache")
+    if json_path:
+        Path(json_path).write_text(json.dumps(report, indent=2))
+    if max_ratio is not None and worst > max_ratio:
+        print(f"REGRESSION: tuned/default ratio {worst:.3f} > gate "
+              f"{max_ratio}")
+        raise SystemExit(2)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail (exit 2) if any tuned/default measured "
+                         "ratio exceeds this")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="timed runs per candidate; times are the min")
+    args = ap.parse_args()
+    run(json_path=args.json or None, max_ratio=args.max_ratio,
+        repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.bench_pipeline",
     "benchmarks.bench_fabric",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_tune",
     "benchmarks.bench_roofline",
     "benchmarks.beyond_paper",
 ]

@@ -51,8 +51,15 @@ from repro.analysis.baseline import Finding
 from repro.analysis.callgraph import FunctionInfo, Package
 
 # nested task bodies created by BootseerRuntime._node_tasks are the
-# startup hot path: everything they can reach runs during a boot
-ROOT_MARKER = "_node_tasks.<locals>."
+# startup hot path: everything they can reach runs during a boot; the
+# autotune stack (repro.tune) runs inside the boot's deferred tune task
+# and meters its own profile I/O, so it is held to the same discipline
+ROOT_MARKERS = ("_node_tasks.<locals>.", "repro.tune.")
+ROOT_MARKER = ROOT_MARKERS[0]  # back-compat alias
+
+
+def _is_root(qual: str) -> bool:
+    return any(m in qual for m in ROOT_MARKERS)
 
 # reader classes whose constructors take (and should be handed) sched=
 READER_CLASSES = frozenset({"StripedReader", "_PlainReader"})
@@ -353,7 +360,7 @@ def check_unscheduled_io(pkg: Package,
                         changed = True
     out: List[Finding] = []
     for qual, info in pkg.functions.items():
-        if ROOT_MARKER not in qual:
+        if not _is_root(qual):
             continue
         for res in sorted(exposed.get(qual, ())):
             chain = pkg.call_chain(qual, holders.get(res, set()))
@@ -412,7 +419,7 @@ def check_accounting_gap(pkg: Package) -> List[Finding]:
 
 
 def _reachable_from_roots(pkg: Package) -> Set[str]:
-    roots = [q for q in pkg.functions if ROOT_MARKER in q]
+    roots = [q for q in pkg.functions if _is_root(q)]
     seen: Set[str] = set(roots)
     frontier = list(roots)
     while frontier:

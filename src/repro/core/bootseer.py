@@ -46,6 +46,8 @@ from repro.dfs.fuse import HdfsFuseMount
 from repro.dfs.hdfs import HdfsCluster
 from repro.envcache.snapshot import EnvCache, job_cache_key, snapshot_dir
 from repro.fabric.cache import NodeCache
+from repro.tune import (ProfileStore, capture_launch_profile,
+                        profile_drift)
 
 
 @dataclass
@@ -101,7 +103,11 @@ class BootseerRuntime:
                  io_tokens: Optional[dict] = None,
                  cache_bytes: Optional[int] = None,
                  cache_policy: str = "lru",
-                 env_cache_bytes: Optional[int] = None):
+                 env_cache_bytes: Optional[int] = None,
+                 tune: bool = False,
+                 tune_workloads: Optional[list] = None,
+                 tune_store: Optional[ProfileStore] = None,
+                 tune_join_timeout_s: float = 300.0):
         self.registry = registry
         self.hdfs = hdfs
         self.mount = HdfsFuseMount(hdfs)
@@ -157,6 +163,19 @@ class BootseerRuntime:
         # remainder can never queue ahead of a later run's hot prefetch
         self._cold_pool = ThreadPoolExecutor(
             2, thread_name_prefix="bootseer-cold")
+        # kernel autotuning (ROADMAP item 5): tune=True restores the
+        # cluster's TuningProfile from the DFS as a non-gating DEFERRED
+        # task on rank 0 — a warm restart fetches tuned Pallas configs
+        # with ZERO re-tuning (notes["tune_cache_hit"]); the first boot
+        # sweeps tune_workloads (default: autotune.tiny_workloads())
+        # once and publishes.  The store gets the runtime's scheduler
+        # but a sched-less mount: it holds its own "dfs" slot tokens.
+        self.tune = bool(tune) and optimize
+        self.tune_workloads = tune_workloads
+        self.tune_join_timeout_s = tune_join_timeout_s
+        self.tune_store = tune_store
+        if self.tune and self.tune_store is None:
+            self.tune_store = ProfileStore(self.mount, sched=self.io_sched)
         # deferred background work (cold image streaming, optimizer-state
         # restore waves) must not fail silently: futures collect here and
         # drain_deferred() re-raises their failures.  All error state is
@@ -166,9 +185,11 @@ class BootseerRuntime:
 
     def _submit_deferred(self, thunk):
         try:
-            self._deferred_futures.append(self._cold_pool.submit(thunk))
+            fut = self._cold_pool.submit(thunk)
         except RuntimeError:  # pool shut down (interpreter exit)
-            pass
+            return None
+        self._deferred_futures.append(fut)
+        return fut
 
     def drain_deferred(self):
         """Block until all deferred background work (cold image streaming,
@@ -338,9 +359,15 @@ class BootseerRuntime:
                 before = snapshot_dir(target)
                 spec.env_setup(target, rank)
                 if self.optimize and rank == 0:
-                    # record-phase fence: rank 0 snapshots its own install
-                    self.env_cache.create(job_cache_key(spec.job_params),
-                                          target, before, spec.job_params)
+                    # record-phase fence: rank 0 snapshots its own install.
+                    # The launch profile (LD_PRELOAD, XLA_FLAGS, dtype
+                    # defaults) the snapshot was captured under rides in
+                    # the snapshot meta, so later restores can detect
+                    # env drift against the recorded profile.
+                    self.env_cache.create(
+                        job_cache_key(spec.job_params), target, before,
+                        spec.job_params,
+                        launch_profile=capture_launch_profile().to_json())
             return restored is not None
 
         install_deps = (StartupTask.ENV_RESTORE,)
@@ -394,6 +421,40 @@ class BootseerRuntime:
             tasks.append(TaskSpec(StartupTask.CKPT_OPT_WAVE, ckpt_opt,
                                   deps=(StartupTask.CKPT_PARAMS_WAVE,),
                                   stage=Stage.MODEL_INIT, gating=False))
+
+        def tune_restore(deps):
+            # non-gating: the profile fetch (tiny, metered DFS read) —
+            # or, on the first boot, the full autotune sweep — streams
+            # off the startup critical path.  Exceptions stay inside the
+            # returned info dict: a failed sweep must degrade to kernel
+            # defaults, not poison the next run's drain_deferred().
+            info: dict = {"hit": False, "invocations": 0}
+            try:
+                from repro.tune import autotune
+                t0 = autotune.stats["tune_invocations"]
+                prof = self.tune_store.fetch()
+                if prof is None:
+                    wls = self.tune_workloads
+                    if wls is None:
+                        wls = autotune.tiny_workloads()
+                    prof = autotune.build_profile(wls)
+                    prof.store = self.tune_store
+                    pub = self.tune_store.publish(prof)
+                    info["digest"] = pub["digest"]
+                else:
+                    info["hit"] = True
+                    info["digest"] = prof.digest()
+                info["invocations"] = \
+                    autotune.stats["tune_invocations"] - t0
+                from repro.tune.profile import set_active_profile
+                set_active_profile(prof)
+            except Exception as exc:  # noqa: BLE001
+                info["error"] = repr(exc)
+            return info
+
+        if self.tune and rank == 0 and self.tune_store is not None:
+            tasks.append(TaskSpec(StartupTask.TUNE_RESTORE, tune_restore,
+                                  stage=Stage.MODEL_INIT, gating=False))
         return tasks
 
     def _run(self, spec: JobSpec, checkpointer, *, include_image: bool,
@@ -441,12 +502,15 @@ class BootseerRuntime:
         # ordinary eviction candidates again) and deferred DAG tasks (cold
         # image remainder, optimizer-state restore waves) stream while
         # training runs
+        tune_future = None
         for res in results:
             prefetch_val = res.values.get(StartupTask.IMAGE_HOT_PREFETCH)
             if isinstance(prefetch_val, dict) and "client" in prefetch_val:
                 prefetch_val["client"].release_pins()
             for _name, thunk in res.deferred:
-                self._submit_deferred(thunk)
+                fut = self._submit_deferred(thunk)
+                if _name == StartupTask.TUNE_RESTORE:
+                    tune_future = fut
 
         # record phase upload (first optimized run)
         if "trace" in trace_holder:
@@ -484,6 +548,39 @@ class BootseerRuntime:
             notes["io_sched"] = self.io_sched.snapshot()
         if not include_image:
             notes["hot_update"] = True
+        if self.tune:
+            # join the profile restore AFTER the TRAINING timestamp was
+            # cut (total = clock() above): the wait shows up nowhere on
+            # the startup critical path, but the notes report the truth
+            # about whether this boot re-tuned or hit the cache
+            notes["tune_cache_hit"] = False
+            notes["tune_invocations"] = 0
+            if tune_future is not None:
+                try:
+                    tinfo = tune_future.result(
+                        timeout=self.tune_join_timeout_s)
+                except Exception as exc:  # noqa: BLE001
+                    notes["tune_error"] = repr(exc)
+                else:
+                    notes["tune_cache_hit"] = bool(tinfo.get("hit"))
+                    notes["tune_invocations"] = tinfo.get("invocations", 0)
+                    if "digest" in tinfo:
+                        notes["tune_profile_digest"] = tinfo["digest"]
+                    if "error" in tinfo:
+                        notes["tune_error"] = tinfo["error"]
+        # launch-profile drift: each node's env restore carries the
+        # profile the snapshot was CREATED under; compare against the
+        # env this boot actually runs with
+        drift: dict = {}
+        for i, res in enumerate(results):
+            meta = res.values.get(StartupTask.ENV_RESTORE)
+            lp = meta.get("launch_profile") if isinstance(meta, dict) \
+                else None
+            if lp is not None:
+                lines = profile_drift(lp)
+                if lines:
+                    drift[f"node{i:03d}"] = lines
+        notes["launch_profile_drift"] = drift
         return StartupResult(
             job_id=spec.job_id, run_idx=run_idx,
             node_stage_s=self.analysis.node_stage_durations(job_tag),

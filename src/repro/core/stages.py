@@ -52,6 +52,7 @@ class StartupTask:
     ENV_INSTALL = "env.install"
     CKPT_PARAMS_WAVE = "ckpt.params_wave"
     CKPT_OPT_WAVE = "ckpt.opt_wave"              # deferred (non-gating)
+    TUNE_RESTORE = "tune.restore"                # deferred (non-gating)
 
 
 # task -> the coarse §2.2 stage it is profiled under
@@ -63,4 +64,5 @@ TASK_STAGE: dict = {
     StartupTask.ENV_INSTALL: Stage.ENV_SETUP,
     StartupTask.CKPT_PARAMS_WAVE: Stage.MODEL_INIT,
     StartupTask.CKPT_OPT_WAVE: Stage.MODEL_INIT,
+    StartupTask.TUNE_RESTORE: Stage.MODEL_INIT,
 }

@@ -282,8 +282,14 @@ class EnvCache:
     # ----- create (first run, node 0) -----
 
     def create(self, key: str, target: str | Path, before: dict,
-               job_params: Optional[dict] = None, *, striped: bool = True) -> dict:
-        """Capture the diff of ``target`` vs ``before`` and upload."""
+               job_params: Optional[dict] = None, *, striped: bool = True,
+               launch_profile: Optional[dict] = None) -> dict:
+        """Capture the diff of ``target`` vs ``before`` and upload.
+
+        ``launch_profile``: a validated launch-env snapshot
+        (``repro.tune.launchprofile.LaunchProfile.to_json()``) stored in
+        the meta — every later restore hands it back so the runtime can
+        diff the live environment and report drift."""
         target = Path(target)
         after = snapshot_dir(target)
         changed = diff_snapshots(before, after)
@@ -303,6 +309,8 @@ class EnvCache:
                 "digest": hashlib.sha256(packed).hexdigest(),
                 "compression": COMPRESSION, "created": time.time(),
                 "job_params": job_params or {}}
+        if launch_profile is not None:
+            meta["launch_profile"] = launch_profile
         self.mount.write(self._meta_path(key),
                          json.dumps(meta).encode())
         with self._flight_master:

@@ -102,8 +102,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     sk = k.shape[2]
     scale = 1.0 / math.sqrt(d)
 
-    block_q = min(block_q, sq)
-    block_k = min(block_k, sk)
+    # clamp to the true lengths (and to >= 1, so a config tuned for a
+    # larger shape-bucket or a garbage profile value stays launchable)
+    block_q = max(1, min(block_q, sq))
+    block_k = max(1, min(block_k, sk))
     # pad sequence dims to block multiples
     pq = (-sq) % block_q
     pk = (-sk) % block_k

@@ -1,37 +1,167 @@
-"""jit'd wrappers exposing the Pallas kernels in the model's tensor layout.
+"""Kernel entry points in the model's tensor layout, with launch
+configs resolved from the ambient :class:`~repro.tune.profile.TuningProfile`.
 
 The distributed (sharded) path lowers the pure-jnp implementations in
-``repro.models``; these ops are the TPU-target kernel entry points, used by
-the kernel benchmarks and validated in interpret mode on CPU.
+``repro.models``; these ops are the TPU-target kernel entry points, used
+by the kernel benchmarks and validated in interpret mode on CPU.
+
+Config resolution (must happen OUTSIDE jit — the blocks are static
+launch parameters): caller-supplied kwargs win; otherwise the ambient
+profile (installed at boot by the bootseer ``tune.restore`` task) is
+consulted per ``(kernel, shape-bucket, dtype, backend)``; otherwise the
+hardcoded defaults.  A profile with ``tune_on_miss`` set tunes an
+unseen key once on first use and publishes the updated profile back
+through its store (record-on-miss).
+
+When Pallas cannot run (CPU backend without ``interpret=True``) the ops
+fall back to the ``repro.kernels.ref`` oracles — and since the
+reference path has no launch configs, any caller-supplied config kwargs
+are being DROPPED: that emits a one-time ``RuntimeWarning`` and bumps
+``stats["ref_fallbacks"]`` / ``stats["dropped_configs"]`` (mirrored
+into the active profile's stats), so autotune measurements can never be
+silently attributed to the wrong implementation.
 """
 
 from __future__ import annotations
 
-import functools
+import threading
+import warnings
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_reference, ssd_reference
 from repro.kernels.ssd import ssd_chunked_kernel
+from repro.tune.profile import (attention_key, get_active_profile,
+                                ssd_key)
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_CHUNK = 256
+
+stats = {"ref_fallbacks": 0, "dropped_configs": 0,
+         "profile_hits": 0, "profile_misses": 0, "miss_tunes": 0}
+
+_warn_lock = threading.Lock()
+_warned: set = set()
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def _warn_once(tag: str, msg: str) -> None:
+    with _warn_lock:
+        if tag in _warned:
+            return
+        _warned.add(tag)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def _pallas_available(interpret: bool) -> bool:
+    return bool(interpret) or jax.default_backend() == "tpu"
+
+
+def _record_fallback(kernel: str, supplied: dict) -> None:
+    dropped = {k: v for k, v in supplied.items() if v is not None}
+    stats["ref_fallbacks"] += 1
+    prof = get_active_profile()
+    if prof is not None:
+        prof.note("ref_fallbacks")
+    if dropped:
+        stats["dropped_configs"] += 1
+        if prof is not None:
+            prof.note("dropped_configs")
+        _warn_once(
+            f"{kernel}.dropped_config",
+            f"{kernel}: falling back to the reference path (backend "
+            f"{jax.default_backend()!r}, interpret=False) — the supplied "
+            f"launch config {dropped} is DROPPED and the result is NOT "
+            "a Pallas measurement (pass interpret=True to exercise the "
+            "kernel on CPU)")
+    else:
+        _warn_once(
+            f"{kernel}.ref_fallback",
+            f"{kernel}: Pallas unavailable (backend "
+            f"{jax.default_backend()!r}, interpret=False); using the "
+            "reference implementation")
+
+
+def _resolve(kernel: str, key: str, supplied: dict, defaults: dict,
+             tune_kwargs: dict) -> dict:
+    """Launch config for ``key``: supplied kwargs > ambient profile >
+    defaults (field-wise: a caller may pin block_q and let the profile
+    pick block_k)."""
+    cfg = dict(defaults)
+    prof = get_active_profile()
+    if prof is not None:
+        hit = prof.resolve(key)
+        if hit is None and prof.tune_on_miss:
+            from repro.tune import autotune
+            stats["miss_tunes"] += 1
+            try:
+                _, entry = autotune.tune_workload(
+                    dict(kernel=kernel, **tune_kwargs),
+                    backend=prof.backend, profile=prof)
+                hit = dict(entry["config"])
+                if prof.store is not None:
+                    prof.store.publish(prof)
+            except Exception as e:  # noqa: BLE001 - tuning must not
+                _warn_once(f"{kernel}.miss_tune",  # break a forward pass
+                           f"{kernel}: record-on-miss tuning failed "
+                           f"({e!r}); using defaults")
+        if hit is None:
+            stats["profile_misses"] += 1
+        else:
+            stats["profile_hits"] += 1
+            cfg.update({k: v for k, v in hit.items() if k in defaults})
+    cfg.update({k: v for k, v in supplied.items() if v is not None})
+    return cfg
+
+
 def attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                 block_q: int | None = None, block_k: int | None = None,
                  interpret: bool = False):
     """Model layout: q [B, S, Hq, Dh], k/v [B, S, Hkv, Dh] ->
     [B, S, Hq, Dh]."""
-    qt = q.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
-    vt = v.transpose(0, 2, 1, 3)
+    supplied = {"block_q": block_q, "block_k": block_k}
+    if not _pallas_available(interpret):
+        _record_fallback("flash_attention", supplied)
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        out = attention_reference(qt, kt, vt, causal=causal,
+                                  window=window)
+        return out.transpose(0, 2, 1, 3)
+    b, sq, hq, d = q.shape
+    hkv, sk = k.shape[2], k.shape[1]
+    prof = get_active_profile()
+    backend = prof.backend if prof is not None else "cpu-interpret"
+    key = attention_key(sq=sq, sk=sk, d=d, g=hq // max(hkv, 1),
+                        dtype=str(q.dtype), causal=causal,
+                        window=window, backend=backend)
+    cfg = _resolve(
+        "flash_attention", key, supplied,
+        {"block_q": DEFAULT_BLOCK_Q, "block_k": DEFAULT_BLOCK_K},
+        dict(b=b, hq=hq, hkv=hkv, sq=sq, sk=sk, d=d,
+             dtype=str(q.dtype), causal=causal, window=window,
+             interpret=interpret))
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
     out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          block_q=cfg["block_q"], block_k=cfg["block_k"],
                           interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_op(x, dt, A, B, C, D, *, chunk: int = 256,
+def ssd_op(x, dt, A, B, C, D, *, chunk: int | None = None,
            interpret: bool = False):
     """Model layout (see repro.models.ssm).  Returns (y, final_state)."""
-    return ssd_chunked_kernel(x, dt, A, B, C, D, chunk=chunk,
+    supplied = {"chunk": chunk}
+    if not _pallas_available(interpret):
+        _record_fallback("ssd", supplied)
+        return ssd_reference(x, dt, A, B, C, D)
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    prof = get_active_profile()
+    backend = prof.backend if prof is not None else "cpu-interpret"
+    key = ssd_key(s=s, h=h, p=p, g=g, n=n, dtype=str(x.dtype),
+                  backend=backend)
+    cfg = _resolve("ssd", key, supplied, {"chunk": DEFAULT_CHUNK},
+                   dict(b=b, s=s, h=h, p=p, g=g, n=n,
+                        dtype=str(x.dtype), interpret=interpret))
+    return ssd_chunked_kernel(x, dt, A, B, C, D, chunk=cfg["chunk"],
                               interpret=interpret)

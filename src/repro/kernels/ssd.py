@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref,
-                state_scr, *, chunk: int):
+                state_scr, *, chunk: int, seq_len: int):
     ci = pl.program_id(1)
     nc = pl.num_programs(1)
 
@@ -35,6 +35,16 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref,
 
     x = x_ref[0].astype(jnp.float32)        # [L, P]
     dt = dt_ref[0].astype(jnp.float32)      # [L, 1]
+    # EXACT pad masking (the same discipline flash_attention applies
+    # with its `kpos < seq_k` mask): zero dt at padded positions, so a
+    # padded step contributes nothing to the intra-chunk quadratic
+    # (pmat's column weight is dt_j), nothing to the state update
+    # (w ~ dt), and leaves the cumulative decay flat — the carried
+    # state and final_state come out bit-identical to the unpadded
+    # recurrence for ANY chunk the tuner may pick, instead of drifting
+    # by an epsilon that scales with the pad count.
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    dt = jnp.where(pos < seq_len, dt, 0.0)
     a = a_ref[0, 0]                          # scalar (negative)
     bm = b_ref[0].astype(jnp.float32)       # [L, N]
     cm = c_ref[0].astype(jnp.float32)       # [L, N]
@@ -85,12 +95,15 @@ def ssd_chunked_kernel(x, dt, A, B, C, D, *, chunk: int = 256,
     b, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
     hg = h // g
-    chunk = min(chunk, s)
+    # clamp like flash_attention clamps block_q/block_k: a tuned config
+    # from a larger shape-bucket (or a corrupt profile's nonsense value)
+    # must degrade to a legal launch, never break a short-sequence call
+    chunk = max(1, min(chunk, s))
     pad = (-s) % chunk
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        # pad dt with a positive epsilon to keep exp() well-behaved
-        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=1e-6)
+        # pad value is irrelevant: the kernel hard-masks dt by position
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
     sp = x.shape[1]
@@ -117,7 +130,7 @@ def ssd_chunked_kernel(x, dt, A, B, C, D, *, chunk: int = 256,
         return (bh, 0, 0)
 
     y, st = pl.pallas_call(
-        functools.partial(_ssd_kernel, chunk=chunk),
+        functools.partial(_ssd_kernel, chunk=chunk, seq_len=s),
         grid=(b * h, nc),
         in_specs=[
             pl.BlockSpec((1, chunk, p), xmap),

@@ -1,4 +1,7 @@
 import os
+# pre-mutation environment: launch-profile drift must diff against the
+# env the user LAUNCHED with, not the XLA_FLAGS override two lines down
+_PRE_DRYRUN_ENV = dict(os.environ)
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
     + os.environ.get("XLA_FLAGS", ""))
@@ -13,6 +16,12 @@ init, and only the dry-run is allowed to see 512 placeholder devices.
 Usage:
   python -m repro.launch.dryrun --arch yi-34b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out out.jsonl]
+
+``--launch-profile PATH`` additionally validates the live environment
+against a recorded launch profile (repro.tune.launchprofile) before
+compiling anything — drift in LD_PRELOAD / XLA_FLAGS / dtype defaults
+prints as ``[launch-profile] drift`` lines, and ``--strict-launch-
+profile`` turns any drift into exit code 2.
 """
 
 import argparse
@@ -204,6 +213,21 @@ def run_one(arch: str, shape_id: str, *, multi_pod: bool = False,
     return out
 
 
+def check_launch_profile(path: str, *, environ=None) -> list:
+    """Load a recorded launch profile from ``path`` and return the drift
+    lines against ``environ`` (default: the pre-dryrun environment, i.e.
+    before this module's own XLA_FLAGS mutation).  Accepts either a bare
+    ``LaunchProfile.to_json()`` document or an env-cache snapshot meta
+    that embeds one under ``"launch_profile"``."""
+    from repro.tune.launchprofile import profile_drift
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict) and "launch_profile" in doc:
+        doc = doc["launch_profile"]
+    return profile_drift(
+        doc, environ=_PRE_DRYRUN_ENV if environ is None else environ)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS))
@@ -232,7 +256,22 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="")
     ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--launch-profile", default="",
+                    help="JSON launch profile (or env-cache meta) to "
+                         "validate the live environment against")
+    ap.add_argument("--strict-launch-profile", action="store_true",
+                    help="exit 2 on any launch-profile drift")
     args = ap.parse_args()
+
+    if args.launch_profile:
+        drift = check_launch_profile(args.launch_profile)
+        for line in drift:
+            print(f"[launch-profile] drift: {line}", flush=True)
+        if not drift:
+            print("[launch-profile] ok: environment matches "
+                  f"{args.launch_profile}", flush=True)
+        elif args.strict_launch_profile:
+            raise SystemExit(2)
 
     todo = []
     meshes = [args.multi_pod]

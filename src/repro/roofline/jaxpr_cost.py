@@ -149,6 +149,36 @@ def jaxpr_cost(jaxpr, *, while_trips: int = 1,
     return flops, bytes_
 
 
+def pallas_costs(jaxpr) -> list:
+    """Per-``pallas_call`` cost triples ``(flops, bytes, grid_steps)``.
+
+    The generic subjaxpr branch of :func:`jaxpr_cost` counts a Pallas
+    kernel body ONCE — the grid is launch metadata, not a scan length —
+    so autotuners that want whole-kernel cost must scale the body by the
+    grid themselves.  This walker finds every ``pallas_call`` equation
+    (descending through pjit/scan/cond wrappers), prices ONE body
+    execution with :func:`jaxpr_cost`, and returns the grid step count
+    alongside so callers can form ``steps * (flops/PEAK + bytes/BW)``.
+    """
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            body = _jaxpr_of(eqn.params["jaxpr"])
+            f, b = jaxpr_cost(body)
+            grid = getattr(eqn.params.get("grid_mapping"), "grid", ()) or ()
+            steps = 1
+            for g in grid:
+                steps *= int(g)
+            out.append((f, b, steps))
+            continue
+        for k in _SUBJAXPR_KEYS:
+            sub = eqn.params.get(k) if eqn.params else None
+            if sub is not None and hasattr(_jaxpr_of(sub), "eqns"):
+                out.extend(pallas_costs(_jaxpr_of(sub)))
+                break
+    return out
+
+
 def analytic_cost(fn, *args, while_trips: int = 1,
                   strict: bool = False) -> dict:
     """Trace ``fn(*args)`` (ShapeDtypeStructs fine) and walk its jaxpr.

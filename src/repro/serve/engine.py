@@ -27,18 +27,23 @@ class ServeEngine:
     """Minimal batched engine: pads a request batch to a fixed shape,
     prefills once, then decodes step-by-step for all sequences together."""
 
-    def __init__(self, model: Model, params, *, batch: int, cache_len: int):
+    def __init__(self, model: Model, params, *, batch: int, cache_len: int,
+                 tune_profile=None):
         self.model = model
         self.params = params
         self.batch = batch
         self.cache_len = cache_len
+        # kernel launch configs for this replica: installed as the
+        # ambient profile around generate(), so the prefill/decode
+        # traces resolve tuned block shapes instead of defaults
+        self.tune_profile = tune_profile
         self._prefill = jit_prefill(model, batch, cache_len)
         self._decode = jit_decode_step(model, batch, cache_len)
 
     @classmethod
     def from_checkpoint(cls, model: Model, checkpointer, step=None, *,
                         batch: int, cache_len: int, sched=None,
-                        priority=None) -> "ServeEngine":
+                        priority=None, tune_store=None) -> "ServeEngine":
         """Build an engine whose params come from a checkpoint via the
         planned restore path — ``restore_planned(sched=, priority=
         CRITICAL)`` — instead of a raw reader: serving cold-starts are
@@ -46,6 +51,13 @@ class ServeEngine:
         a replica booting under load competes for DFS tokens at CRITICAL
         (params gate time-to-first-token) rather than bypassing the
         scheduler.  Params-only: no optimizer wave is planned or read.
+
+        ``tune_store``: a ``repro.tune.store.ProfileStore`` — the
+        replica fetches the cluster's TuningProfile (tiny, metered,
+        DEFERRED by the store's own default priority: it never gates
+        time-to-first-token) so a serving cold-start inherits tuned
+        kernel configs with zero re-tuning; a missing or corrupt
+        profile silently keeps the defaults.
         """
         from repro.core.pipeline import CRITICAL
         if step is None:
@@ -58,9 +70,19 @@ class ServeEngine:
         (params,) = checkpointer.restore_planned(
             step, like, sched=sched,
             priority=CRITICAL if priority is None else priority)
-        return cls(model, params, batch=batch, cache_len=cache_len)
+        tune_profile = tune_store.fetch() if tune_store is not None \
+            else None
+        return cls(model, params, batch=batch, cache_len=cache_len,
+                   tune_profile=tune_profile)
 
     def generate(self, requests: list[Request], seed: int = 0) -> list[Request]:
+        if self.tune_profile is None:
+            return self._generate(requests, seed)
+        from repro.tune.profile import use_profile
+        with use_profile(self.tune_profile):
+            return self._generate(requests, seed)
+
+    def _generate(self, requests: list[Request], seed: int = 0) -> list[Request]:
         assert len(requests) <= self.batch
         # pad the request list to the engine batch
         while len(requests) < self.batch:

@@ -86,6 +86,12 @@ class ClusterParams:
     local_read_rate: float = 6.0 * GB
     delta_overhead_s_per_layer: float = 0.5
 
+    # kernel autotuning (repro.tune): a fresh cluster sweeps Pallas
+    # launch configs once (compile + measure per candidate); every later
+    # boot fetches the tiny published profile from the DFS instead
+    tune_sweep_s: float = 240.0        # first-boot candidate sweep
+    tune_profile_bytes: float = 256 * 1024  # published profile artifact
+
     # node variability (§3.3)
     jitter_sigma: float = 0.15         # lognormal sigma on local work
     slow_node_p: float = 0.008         # rare straggler probability
@@ -123,6 +129,11 @@ class StartupWorkload:
     # that many delta layers over its base snapshot
     restore_ahead_coverage: float = 0.0
     delta_chain_len: int = 0
+    # kernel autotuning: the baseline pays the candidate sweep INSIDE
+    # model init on every boot (tuning gates training); bootseer runs it
+    # as non-gating deferred work on the first boot and every warm boot
+    # fetches the published profile (tiny DFS read, also non-gating)
+    autotune: bool = False
     seed: int = 0
 
     def _jitter(self, rng, n: int) -> np.ndarray:
@@ -317,12 +328,28 @@ class StartupWorkload:
                        * min(max(self.restore_ahead_coverage, 0.0), 1.0))
             chain_s = self.delta_chain_len * p.delta_overhead_s_per_layer
         local_s = covered / p.local_read_rate
+        # kernel autotuning: the baseline re-runs the candidate sweep on
+        # the startup critical path every boot; bootseer defers it off
+        # the critical path (first boot) or fetches the published
+        # profile — a tiny DFS read that also rides DEFERRED
+        tune_s, tune_gating, tune_hit = 0.0, False, False
+        if self.autotune:
+            if not self.bootseer:
+                tune_s, tune_gating = p.tune_sweep_s, True
+            elif warm:
+                tune_hit = True
+                tune_s = p.tune_profile_bytes / min(p.node_nic,
+                                                    p.hdfs_capacity)
+            else:
+                tune_s = p.tune_sweep_s
         transfers, extra = [], {}
         for i, node in enumerate(nodes):
             transfers.append(Transfer(node, res,
                                       (per_node_ckpt - covered) * read_amp))
             extra[node] = (p.model_setup_s * jit[i] + decode_s
                            + local_s + chain_s)
+            if tune_gating:
+                extra[node] += tune_s * jit[i]
         record_stage(Stage.MODEL_INIT, transfers, extra)
 
         node_level = {n: sum(stages[s][n] for s in stages) for n in nodes}
@@ -340,7 +367,9 @@ class StartupWorkload:
                 "critical_path": critical_path,
                 "registry_egress_bytes": registry_egress,
                 "read_amplification": read_amp,
-                "restore_ahead_local_bytes": covered * num_nodes}
+                "restore_ahead_local_bytes": covered * num_nodes,
+                "tune_s": tune_s, "tune_gating": tune_gating,
+                "tune_cache_hit": tune_hit}
 
     # ------------------------------------------------------------------
     def _overlapped(self, stage_parts: dict, nodes: list) -> tuple:

@@ -14,13 +14,29 @@ from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.step import jit_train_step
 
 
-def train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
-               opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
-               log_every: int = 10, log_fn: Callable = print,
-               checkpointer=None, ckpt_every: int = 0, full_every: int = 0,
-               params=None, opt_state=None, start_step: int = 0,
-               resume_from: Optional[int] = None, restore_specs=None,
-               restore_coords: Optional[dict] = None, restore_sched=None):
+def train_loop(model: Model, *, tune_profile=None, **kw):
+    """Train on the synthetic stream.  Returns (params, opt_state, history).
+
+    See :func:`_train_loop` for the full keyword set.  ``tune_profile``:
+    a :class:`repro.tune.profile.TuningProfile` installed as the ambient
+    profile for the loop's duration, so the kernel ops resolve their
+    tuned launch configs (block shapes, SSD chunk) instead of hardcoded
+    defaults — the training-side consumer of the boot-time profile
+    restore."""
+    if tune_profile is None:
+        return _train_loop(model, **kw)
+    from repro.tune.profile import use_profile
+    with use_profile(tune_profile):
+        return _train_loop(model, **kw)
+
+
+def _train_loop(model: Model, *, batch: int, seq_len: int, steps: int,
+                opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+                log_every: int = 10, log_fn: Callable = print,
+                checkpointer=None, ckpt_every: int = 0, full_every: int = 0,
+                params=None, opt_state=None, start_step: int = 0,
+                resume_from: Optional[int] = None, restore_specs=None,
+                restore_coords: Optional[dict] = None, restore_sched=None):
     """Train on the synthetic stream.  Returns (params, opt_state, history).
 
     ``resume_from``: checkpoint step to restore through the planner

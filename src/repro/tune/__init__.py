@@ -1,0 +1,22 @@
+"""Kernel autotuning + launch profiles (ROADMAP item 5).
+
+Light imports only: ``core/bootseer.py`` pulls profile/store/launch
+symbols from here and must stay jax-free; the sweep itself
+(``repro.tune.autotune``) imports jax and is loaded lazily.
+"""
+
+from repro.tune.launchprofile import (LaunchProfile,  # noqa: F401
+                                      capture_launch_profile,
+                                      profile_drift)
+from repro.tune.profile import (PROFILE_VERSION, ProfileError,  # noqa: F401
+                                TuningProfile, attention_key,
+                                get_active_profile, set_active_profile,
+                                shape_bucket, ssd_key, use_profile)
+from repro.tune.store import ProfileStore  # noqa: F401
+
+
+def __getattr__(name):
+    if name in ("autotune", "prune"):
+        import importlib
+        return importlib.import_module(f"repro.tune.{name}")
+    raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")

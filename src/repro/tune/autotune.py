@@ -1,0 +1,272 @@
+"""The autotune loop: sweep Pallas launch configs, prune with the
+roofline model, verify against the pure-jnp oracles, record winners.
+
+Sweep shape per kernel:
+
+  1. enumerate candidate configs (block sizes clamped to the workload's
+     sequence length, deduped — the hardcoded default is always in the
+     candidate set, so a winner can never be *worse* than the default
+     under the same measurement);
+  2. trace every candidate and rank by roofline prediction
+     (``repro.tune.prune``); only the best few reach measurement;
+  3. run each survivor once and verify allclose against
+     ``repro.kernels.ref`` — a config that fails numerics is discarded
+     no matter how fast it is;
+  4. measure the survivors back-to-back on the process-wide measurement
+     pool (ONE worker thread: concurrent tuning jobs would contend for
+     CPU and corrupt each other's timings) and record the argmin.
+
+``stats["tune_invocations"]`` counts sweeps — the warm-boot acceptance
+counter: a profile-cache hit must leave it untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_reference, ssd_reference
+from repro.kernels.ssd import ssd_chunked_kernel
+from repro.tune import prune
+from repro.tune.profile import TuningProfile, attention_key, ssd_key
+
+# module-wide counters (process lifetime); tune_invocations is the
+# zero-re-tuning witness asserted by StartupResult.notes
+stats = {"tune_invocations": 0, "measurements": 0, "pruned": 0,
+         "verify_failures": 0}
+
+CANDIDATE_BLOCKS = (32, 64, 128, 256)
+CANDIDATE_CHUNKS = (32, 64, 128, 256)
+DEFAULT_ATTENTION = {"block_q": 128, "block_k": 128}
+DEFAULT_SSD = {"chunk": 256}
+
+# allclose gates vs repro.kernels.ref (matches tests/test_kernels.py
+# tolerances with headroom for the larger sweep shapes)
+_ATOL = {"flash_attention": {"float32": 2e-4, "bfloat16": 4e-2},
+         "ssd": {"float32": 2e-3, "bfloat16": 6e-2}}
+
+MEASURE_TIMEOUT_S = 300.0
+
+# ---------------------------------------------------------------------------
+# the measurement pool: a process-wide singleton.  Per-sweep executors
+# would pay thread-spawn per tune AND let two sweeps time concurrently.
+# ---------------------------------------------------------------------------
+
+_pool = None
+_pool_lock = threading.Lock()
+
+
+def _measure_pool() -> ThreadPoolExecutor:
+    global _pool
+    with _pool_lock:
+        if _pool is None:
+            _pool = ThreadPoolExecutor(
+                1, thread_name_prefix="tune-measure")
+        return _pool
+
+
+def _measure(thunk, repeats: int) -> float:
+    """Best-of-``repeats`` wall time of ``thunk`` on the measurement
+    pool (first call compiles and is discarded)."""
+    stats["measurements"] += 1
+
+    def job():
+        jax.block_until_ready(thunk())
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(thunk())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return _measure_pool().submit(job).result(timeout=MEASURE_TIMEOUT_S)
+
+
+def _allclose(out, ref, kernel: str, dtype: str) -> bool:
+    atol = _ATOL[kernel].get(dtype, _ATOL[kernel]["float32"])
+    outs = out if isinstance(out, (tuple, list)) else (out,)
+    refs = ref if isinstance(ref, (tuple, list)) else (ref,)
+    for o, r in zip(outs, refs):
+        err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                    - r.astype(jnp.float32))))
+        if not err <= atol:
+            return False
+    return True
+
+
+def _sweep(kernel: str, key: str, candidates: list, default: dict,
+           make_thunk, ref, dtype: str, repeats: int, prune_keep: int,
+           profile):
+    """Shared sweep body: prune -> verify -> measure -> record."""
+    stats["tune_invocations"] += 1
+    priced = prune.prune_candidates(
+        candidates,
+        lambda cfg: prune.predict_seconds(make_thunk(cfg)),
+        keep=prune_keep)
+    # the default config must survive pruning: the winner is only
+    # meaningful relative to a default measured under identical load
+    if default not in [cfg for cfg, _ in priced]:
+        priced.append((default, float("inf")))
+    stats["pruned"] += max(0, len(candidates) - len(priced))
+
+    measured = {}
+    predicted = dict((tuple(sorted(c.items())), p) for c, p in priced)
+    for cfg, _pred in priced:
+        thunk = make_thunk(cfg)
+        try:
+            out = thunk()
+        except Exception:  # noqa: BLE001 - illegal launch config
+            stats["verify_failures"] += 1
+            continue
+        if not _allclose(out, ref, kernel, dtype):
+            stats["verify_failures"] += 1
+            continue
+        measured[tuple(sorted(cfg.items()))] = _measure(thunk, repeats)
+    if not measured:
+        raise RuntimeError(
+            f"autotune: no {kernel} candidate passed verification "
+            f"for {key}")
+    win = min(measured, key=measured.get)
+    config = dict(win)
+    pred_win = predicted.get(win)
+    if pred_win is not None and pred_win == float("inf"):
+        pred_win = None  # keep the profile JSON strictly finite
+    entry = {"config": config, "measured_s": measured[win],
+             "predicted_s": pred_win,
+             "default_s": measured.get(tuple(sorted(default.items()))),
+             "candidates": len(candidates), "measured": len(measured)}
+    if profile is not None:
+        rec = profile.record(key, config,
+                             measured_s=entry["measured_s"],
+                             predicted_s=entry["predicted_s"])
+        rec.update({k: v for k, v in entry.items() if k not in rec})
+    return key, entry
+
+
+# ---------------------------------------------------------------------------
+# per-kernel sweeps
+# ---------------------------------------------------------------------------
+
+
+def attention_candidates(sq: int, sk: int) -> list:
+    seen, out = set(), []
+    for bq in CANDIDATE_BLOCKS:
+        for bk in CANDIDATE_BLOCKS:
+            cfg = (min(bq, sq), min(bk, sk))
+            if cfg not in seen:
+                seen.add(cfg)
+                out.append({"block_q": cfg[0], "block_k": cfg[1]})
+    return out
+
+
+def ssd_candidates(s: int) -> list:
+    seen, out = set(), []
+    for ch in CANDIDATE_CHUNKS:
+        c = min(ch, s)
+        if c not in seen:
+            seen.add(c)
+            out.append({"chunk": c})
+    return out
+
+
+def tune_attention(*, b: int = 1, hq: int = 4, hkv: int = 2,
+                   sq: int = 128, sk: int | None = None, d: int = 64,
+                   dtype: str = "float32", causal: bool = True,
+                   window: int = 0, backend: str = "cpu-interpret",
+                   interpret: bool = True, repeats: int = 3,
+                   prune_keep: int = 4, profile=None, seed: int = 0):
+    """Sweep ``flash_attention`` block shapes for one workload; returns
+    ``(key, entry)`` and records into ``profile`` when given."""
+    sk = sq if sk is None else sk
+    jt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d)).astype(jt)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d)).astype(jt)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d)).astype(jt)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    key = attention_key(sq=sq, sk=sk, d=d, g=hq // hkv, dtype=dtype,
+                        causal=causal, window=window, backend=backend)
+
+    def make_thunk(cfg):
+        return functools.partial(
+            flash_attention, q, k, v, causal=causal, window=window,
+            block_q=cfg["block_q"], block_k=cfg["block_k"],
+            interpret=interpret)
+
+    default = {"block_q": min(DEFAULT_ATTENTION["block_q"], sq),
+               "block_k": min(DEFAULT_ATTENTION["block_k"], sk)}
+    return _sweep("flash_attention", key, attention_candidates(sq, sk),
+                  default, make_thunk, ref, dtype, repeats, prune_keep,
+                  profile)
+
+
+def tune_ssd(*, b: int = 1, s: int = 128, h: int = 2, p: int = 32,
+             g: int = 1, n: int = 32, dtype: str = "float32",
+             backend: str = "cpu-interpret", interpret: bool = True,
+             repeats: int = 3, prune_keep: int = 4, profile=None,
+             seed: int = 1):
+    """Sweep the SSD scan's chunk length for one workload."""
+    jt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(jt)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(jt)
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+    B = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(jt)
+    C = (jax.random.normal(ks[4], (b, s, g, n)) * 0.5).astype(jt)
+    D = jnp.ones((h,))
+    ref = ssd_reference(x, dt, A, B, C, D)
+    key = ssd_key(s=s, h=h, p=p, g=g, n=n, dtype=dtype, backend=backend)
+
+    def make_thunk(cfg):
+        return functools.partial(
+            ssd_chunked_kernel, x, dt, A, B, C, D, chunk=cfg["chunk"],
+            interpret=interpret)
+
+    default = {"chunk": min(DEFAULT_SSD["chunk"], s)}
+    return _sweep("ssd", key, ssd_candidates(s), default, make_thunk,
+                  ref, dtype, repeats, prune_keep, profile)
+
+
+# ---------------------------------------------------------------------------
+# workload-dict driver (what the bootseer deferred task runs)
+# ---------------------------------------------------------------------------
+
+
+def tiny_workloads() -> list:
+    """Default boot-time sweep: small shapes, seconds not minutes on the
+    CPU interpreter.  Real deployments pass production shape buckets."""
+    return [
+        {"kernel": "flash_attention", "b": 1, "hq": 2, "hkv": 1,
+         "sq": 32, "d": 16, "prune_keep": 2},
+        {"kernel": "ssd", "b": 1, "s": 32, "h": 2, "p": 16, "n": 16,
+         "prune_keep": 2},
+    ]
+
+
+def tune_workload(wl: dict, *, backend: str = "cpu-interpret",
+                  repeats: int = 3, profile=None):
+    """Dispatch one workload dict (``{"kernel": ..., <shape kwargs>}``)
+    to its sweep."""
+    wl = dict(wl)
+    kernel = wl.pop("kernel")
+    wl.setdefault("repeats", repeats)
+    if kernel == "flash_attention":
+        return tune_attention(backend=backend, profile=profile, **wl)
+    if kernel == "ssd":
+        return tune_ssd(backend=backend, profile=profile, **wl)
+    raise ValueError(f"unknown tune workload kernel {kernel!r}")
+
+
+def build_profile(workloads, *, backend: str = "cpu-interpret",
+                  repeats: int = 3, profile=None) -> TuningProfile:
+    """Sweep every workload into one profile (fresh unless given)."""
+    prof = profile or TuningProfile(backend=backend)
+    for wl in workloads:
+        tune_workload(wl, backend=backend, repeats=repeats, profile=prof)
+    return prof

@@ -1,0 +1,92 @@
+"""Validated launch profiles: the host-level env knobs that must
+survive a restart.
+
+The HomebrewNLP/olmax ``run.sh`` exemplars show where real step-time
+hides outside the kernels: tcmalloc via ``LD_PRELOAD``, ``XLA_FLAGS``,
+and the JAX dtype defaults.  A launch profile captures those variables
+at env-snapshot creation time (``EnvCache.create`` stores it in the
+snapshot meta), and every later boot diffs the live environment against
+it — drift lands in ``StartupResult.notes["launch_profile_drift"]`` and
+``launch/dryrun.py --launch-profile`` checks it before compiling.
+
+Kept import-light on purpose (stdlib only): ``core/bootseer.py`` uses
+it and must never transitively import jax — and ``dryrun``'s own
+XLA_FLAGS mutation means IT has to diff against a pre-mutation copy of
+the environment, which this module supports via ``environ=``.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+LAUNCH_PROFILE_VERSION = 1
+
+# the knobs worth pinning across restarts: allocator, XLA, dtype defaults
+TRACKED_ENV_VARS = (
+    "LD_PRELOAD",                      # tcmalloc / allocator interposer
+    "XLA_FLAGS",
+    "XLA_PYTHON_CLIENT_MEM_FRACTION",
+    "JAX_PLATFORMS",
+    "JAX_ENABLE_X64",                  # dtype defaults
+    "JAX_DEFAULT_MATMUL_PRECISION",
+    "JAX_DEFAULT_DTYPE_BITS",
+    "TF_CPP_MIN_LOG_LEVEL",
+)
+
+
+@dataclass
+class LaunchProfile:
+    """Snapshot of the tracked launch env vars (None = was unset)."""
+
+    env: dict = field(default_factory=dict)
+    version: int = LAUNCH_PROFILE_VERSION
+
+    def to_json(self) -> dict:
+        return {"version": self.version, "env": dict(self.env)}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "LaunchProfile":
+        if not isinstance(doc, dict) \
+                or doc.get("version") != LAUNCH_PROFILE_VERSION:
+            raise ValueError(
+                f"unsupported launch profile: {doc!r}")
+        env = doc.get("env")
+        if not isinstance(env, dict):
+            raise ValueError("launch profile env is not a dict")
+        return cls(env=dict(env))
+
+
+def capture_launch_profile(environ=None,
+                           tracked=TRACKED_ENV_VARS) -> LaunchProfile:
+    env = os.environ if environ is None else environ
+    return LaunchProfile(env={var: env.get(var) for var in tracked})
+
+
+def _flag_set(value: Optional[str]) -> frozenset:
+    """XLA_FLAGS-style values compare as token sets: flag order and
+    duplicates are not drift."""
+    return frozenset((value or "").split())
+
+
+def profile_drift(profile, environ=None) -> list:
+    """Human-readable drift lines between ``profile`` (a LaunchProfile
+    or its ``to_json`` dict) and the live environment.  Empty list =
+    no drift.  An unparseable profile reports itself as drift instead
+    of raising — boot paths must keep booting."""
+    env = os.environ if environ is None else environ
+    if isinstance(profile, dict):
+        try:
+            profile = LaunchProfile.from_json(profile)
+        except ValueError as e:
+            return [f"invalid launch profile: {e}"]
+    out = []
+    for var, want in profile.env.items():
+        have = env.get(var)
+        if var == "XLA_FLAGS":
+            if _flag_set(want) != _flag_set(have):
+                out.append(f"{var}: snapshot {want!r} != current {have!r}")
+        elif want != have:
+            out.append(f"{var}: snapshot {want!r} != current {have!r}")
+    return out

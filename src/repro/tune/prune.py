@@ -1,0 +1,59 @@
+"""Roofline pruning for the autotune sweep.
+
+Measuring a Pallas candidate costs a compile (~hundreds of ms in
+interpret mode); pricing it costs one trace (~tens of ms).  So the
+sweep traces every candidate, prices it with the roofline model the
+dry-run already uses (``roofline/jaxpr_cost`` body costs scaled by the
+launch grid, ``roofline/analysis`` machine constants), and only the
+cheapest-predicted few reach the measurement pool.
+
+The prediction is a *ranking* signal, not a latency estimate: on the
+CPU interpreter absolute times are off by orders of magnitude, but the
+relative order of block configs — more grid steps means more launch
+overhead, smaller blocks mean worse MXU utilization — survives, which
+is all pruning needs.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+from repro.roofline.jaxpr_cost import pallas_costs
+
+# fixed per-grid-step launch/bookkeeping overhead: the term that
+# separates block configs whose flop/byte totals are identical
+LAUNCH_OVERHEAD_S = 1e-6
+
+
+def predict_seconds(fn, *args) -> float:
+    """Roofline-predicted seconds for ``fn(*args)``'s pallas_calls.
+
+    Traces (never executes) ``fn``.  Returns +inf when the trace
+    contains no ``pallas_call`` — such a candidate cannot be ranked and
+    should not win over one that can.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    costs = pallas_costs(closed.jaxpr)
+    if not costs:
+        return float("inf")
+    total = 0.0
+    for flops, nbytes, steps in costs:
+        total += steps * (flops / PEAK_FLOPS + nbytes / HBM_BW
+                          + LAUNCH_OVERHEAD_S)
+    return total
+
+
+def prune_candidates(candidates: list, predict, keep: int) -> list:
+    """Rank ``candidates`` by ``predict(candidate)`` ascending and keep
+    the best ``keep``.  Returns ``[(candidate, predicted_s), ...]``; a
+    candidate whose trace fails is dropped (it would fail measurement
+    too, just slower)."""
+    priced = []
+    for cand in candidates:
+        try:
+            priced.append((cand, predict(cand)))
+        except Exception:  # noqa: BLE001 - unlowerable candidate
+            continue
+    priced.sort(key=lambda cp: cp[1])
+    return priced[:max(1, int(keep))]

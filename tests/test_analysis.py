@@ -547,6 +547,89 @@ class TestIOKnownGood:
         assert findings == []
 
 
+def lint_tree(tmp_path, relpath, src):
+    """Lint one module at a package-relative path (module name comes
+    from the path, so ``repro/tune/mod.py`` lints as ``repro.tune.mod``
+    — a root of the startup-hot-path checks)."""
+    f = tmp_path / relpath
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(src))
+    pkg = Package.load([f], package_root=tmp_path)
+    table = collect_locks(pkg)
+    graph = build_lock_order(pkg, table)
+    return run_checks(pkg, table, graph) + run_io_checks(pkg), graph
+
+
+class TestTuneRoots:
+    """repro.tune.* is a lint root: the autotune stack runs inside the
+    boot's deferred tune task, so its functions are held to the same
+    executor-hygiene / unscheduled-io discipline as _node_tasks bodies
+    without needing a _node_tasks caller in the fixture."""
+
+    def test_per_call_executor_in_tune_is_flagged(self, tmp_path):
+        findings, _ = lint_tree(tmp_path, "repro/tune/sweep.py", """
+            from concurrent.futures import ThreadPoolExecutor
+
+            def measure(thunk):
+                with ThreadPoolExecutor(1) as ex:
+                    return ex.submit(thunk).result(timeout=30)
+        """)
+        assert [f.check for f in findings] == ["executor-hygiene"]
+        assert "per-call ThreadPoolExecutor" in findings[0].detail
+        assert "repro.tune.sweep" in findings[0].function
+
+    def test_singleton_pool_in_tune_is_clean(self, tmp_path):
+        findings, _ = lint_tree(tmp_path, "repro/tune/sweep.py", """
+            from concurrent.futures import ThreadPoolExecutor
+
+            _pool = None
+
+            def _measure_pool():
+                global _pool
+                if _pool is None:
+                    _pool = ThreadPoolExecutor(1)
+                return _pool
+
+            def measure(thunk):
+                return _measure_pool().submit(thunk).result(timeout=30)
+        """)
+        assert findings == []
+
+    def test_untimed_result_in_tune_is_flagged(self, tmp_path):
+        findings, _ = lint_tree(tmp_path, "repro/tune/sweep.py", """
+            def measure(pool, thunk):
+                return pool.submit(thunk).result()
+        """)
+        assert [f.check for f in findings] == ["executor-hygiene"]
+        assert "untimed future.result()" in findings[0].detail
+
+    def test_unscheduled_profile_read_in_tune_is_flagged(self, tmp_path):
+        findings, _ = lint_tree(tmp_path, "repro/tune/store.py", """
+            class Store:
+                def __init__(self, hdfs):
+                    self.hdfs = hdfs
+
+                def fetch(self):
+                    return self.hdfs.pread("tune/HEAD", 0, 64)
+        """)
+        assert [f.check for f in findings] == ["unscheduled-io"]
+        assert "'dfs'" in findings[0].detail
+        assert "repro.tune.store" in findings[0].function
+
+    def test_metered_profile_read_in_tune_is_clean(self, tmp_path):
+        findings, _ = lint_tree(tmp_path, "repro/tune/store.py", """
+            class Store:
+                def __init__(self, hdfs, sched):
+                    self.hdfs = hdfs
+                    self.sched = sched
+
+                def fetch(self):
+                    with self.sched.slot("dfs", nbytes=64):
+                        return self.hdfs.pread("tune/HEAD", 0, 64)
+        """)
+        assert findings == []
+
+
 class TestIOWitness:
     def test_reconcile_flags_unaccounted_reads(self):
         from repro.analysis import iowitness

@@ -1,0 +1,396 @@
+"""Autotune subsystem tests (ISSUE 9): profile validation, the DFS
+profile store, ambient-profile config resolution in the kernel ops,
+launch profiles, and the bootseer zero-re-tuning round trip."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.tune import (ProfileError, ProfileStore, TuningProfile,
+                        attention_key, capture_launch_profile,
+                        profile_drift, shape_bucket, ssd_key,
+                        use_profile)
+from repro.tune.store import BLOB_DIR, HEAD_PATH
+
+
+@pytest.fixture()
+def mount(tmp_path):
+    from repro.dfs.fuse import HdfsFuseMount
+    from repro.dfs.hdfs import HdfsCluster
+    hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=4,
+                       block_size=1 << 20)
+    return HdfsFuseMount(hdfs)
+
+
+def _profile_with_entry():
+    prof = TuningProfile(backend="cpu-interpret")
+    key = attention_key(sq=128, sk=128, d=32, g=2, dtype="float32",
+                        causal=True, window=0, backend="cpu-interpret")
+    prof.record(key, {"block_q": 64, "block_k": 32}, measured_s=0.01)
+    return prof, key
+
+
+# ---------------------------------------------------------------------------
+# profile format
+# ---------------------------------------------------------------------------
+
+
+class TestProfile:
+    def test_shape_bucket(self):
+        assert shape_bucket(1) == 16
+        assert shape_bucket(16) == 16
+        assert shape_bucket(17) == 32
+        assert shape_bucket(1000) == 1024
+
+    def test_keys_bucket_sequence_lengths(self):
+        k1 = attention_key(sq=100, sk=100, d=64, g=2, dtype="float32",
+                           causal=True, window=0, backend="b")
+        k2 = attention_key(sq=128, sk=128, d=64, g=2, dtype="float32",
+                           causal=True, window=0, backend="b")
+        assert k1 == k2
+        assert ssd_key(s=33, h=2, p=16, g=1, n=16, dtype="float32",
+                       backend="b") != \
+            ssd_key(s=32, h=2, p=16, g=1, n=16, dtype="float32",
+                    backend="b")
+
+    def test_roundtrip_and_digest_stability(self):
+        prof, key = _profile_with_entry()
+        raw = prof.to_json()
+        back = TuningProfile.from_json(raw)
+        assert back.resolve(key) == {"block_q": 64, "block_k": 32}
+        assert back.digest() == prof.digest()
+
+    def test_corrupt_payload_rejected(self):
+        prof, _ = _profile_with_entry()
+        doc = json.loads(prof.to_json())
+        doc["payload"]["backend"] = "tampered"
+        with pytest.raises(ProfileError, match="digest"):
+            TuningProfile.from_json(json.dumps(doc).encode())
+
+    def test_version_mismatch_rejected(self):
+        prof, _ = _profile_with_entry()
+        prof.version = 99
+        with pytest.raises(ProfileError, match="version"):
+            TuningProfile.from_json(prof.to_json())
+
+    def test_garbage_bytes_rejected(self):
+        with pytest.raises(ProfileError):
+            TuningProfile.from_json(b"not json at all")
+
+    def test_nonpositive_config_rejected(self):
+        prof = TuningProfile()
+        prof.record("k", {"block_q": 0})
+        with pytest.raises(ProfileError, match="non-positive"):
+            TuningProfile.from_json(prof.to_json())
+
+    def test_resolve_counts_hits_and_misses(self):
+        prof, key = _profile_with_entry()
+        assert prof.resolve(key) is not None
+        assert prof.resolve("absent") is None
+        assert prof.stats["hits"] == 1 and prof.stats["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# DFS store
+# ---------------------------------------------------------------------------
+
+
+class TestStore:
+    def test_publish_fetch_roundtrip(self, mount):
+        prof, key = _profile_with_entry()
+        store = ProfileStore(mount)
+        pub = store.publish(prof)
+        got = store.fetch()
+        assert got is not None
+        assert got.digest() == pub["digest"]
+        assert got.resolve(key) == {"block_q": 64, "block_k": 32}
+        assert got.store is store
+        assert store.stats["hits"] == 1
+
+    def test_missing_head_is_none(self, mount):
+        assert ProfileStore(mount).fetch() is None
+
+    def test_corrupt_blob_rejected_without_raising(self, mount):
+        prof, _ = _profile_with_entry()
+        store = ProfileStore(mount)
+        pub = store.publish(prof)
+        blob = f"{BLOB_DIR}/{pub['digest']}.json"
+        raw = bytearray(mount.open(blob).read())
+        raw[len(raw) // 2] ^= 0xFF
+        mount.write(blob, bytes(raw))
+        assert store.fetch() is None
+        assert store.stats["rejects"] == 1
+
+    def test_version_skew_rejected(self, mount):
+        prof, _ = _profile_with_entry()
+        prof.version = 99
+        store = ProfileStore(mount)
+        store.publish(prof)
+        assert store.fetch() is None
+
+    def test_head_blob_mismatch_rejected(self, mount):
+        prof, _ = _profile_with_entry()
+        other = TuningProfile(backend="elsewhere")
+        store = ProfileStore(mount)
+        store.publish(prof)
+        # HEAD points at prof's digest but the blob there holds other
+        mount.write(f"{BLOB_DIR}/{prof.digest()}.json", other.to_json())
+        assert store.fetch() is None
+
+    def test_store_io_is_metered(self, mount):
+        from repro.core.pipeline import IOScheduler
+        sched = IOScheduler()
+        store = ProfileStore(mount, sched=sched)
+        prof, _ = _profile_with_entry()
+        pub = store.publish(prof)
+        store.fetch()
+        snap = sched.snapshot()["dfs"]
+        moved = sum(snap["bytes"].values())
+        assert snap["acquires"] >= 2  # publish + fetch slots
+        assert moved >= 2 * pub["bytes"]  # blob written then read back
+        assert store.stats["bytes_written"] > 0
+        assert store.stats["bytes_read"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ops config resolution
+# ---------------------------------------------------------------------------
+
+
+class TestOpsResolution:
+    def _args(self, sq=32, d=16, hq=2, hkv=1, dtype="float32"):
+        import jax
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (1, sq, hq, d)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, sq, hkv, d)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, sq, hkv, d)).astype(dtype)
+        return q, k, v
+
+    def test_profile_config_is_used_and_matches_ref(self):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        from repro.kernels.ref import attention_reference
+        q, k, v = self._args()
+        prof = TuningProfile(backend="cpu-interpret")
+        key = attention_key(sq=32, sk=32, d=16, g=2, dtype="float32",
+                            causal=True, window=0,
+                            backend="cpu-interpret")
+        prof.record(key, {"block_q": 16, "block_k": 16})
+        h0 = ops.stats["profile_hits"]
+        with use_profile(prof):
+            out = ops.attention_op(q, k, v, causal=True, interpret=True)
+        assert ops.stats["profile_hits"] == h0 + 1
+        assert prof.stats["hits"] >= 1
+        ref = attention_reference(*(t.transpose(0, 2, 1, 3)
+                                    for t in (q, k, v)),
+                                  causal=True).transpose(0, 2, 1, 3)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-4
+
+    def test_corrupt_stored_profile_degrades_to_defaults(self, mount):
+        """A corrupt DFS artifact must mean 'defaults', not a crash."""
+        from repro.kernels import ops
+        prof, _ = _profile_with_entry()
+        store = ProfileStore(mount)
+        store.publish(prof)
+        mount.write(HEAD_PATH, b"deadbeef")  # dangling HEAD
+        assert store.fetch() is None
+        m0 = ops.stats["profile_misses"]
+        q, k, v = self._args()
+        with use_profile(None):  # what the boot installs on fetch=None
+            out = ops.attention_op(q, k, v, interpret=True)
+        assert out.shape == q.shape
+        assert ops.stats["profile_misses"] == m0  # no profile: no miss
+
+    def test_ref_fallback_warns_once_and_counts_drops(self):
+        import jax
+
+        from repro.kernels import ops
+        if jax.default_backend() == "tpu":
+            pytest.skip("ref fallback only happens off-TPU")
+        q, k, v = self._args()
+        prof = TuningProfile()
+        ops._warned.discard("flash_attention.dropped_config")
+        f0, d0 = ops.stats["ref_fallbacks"], ops.stats["dropped_configs"]
+        with use_profile(prof):
+            with pytest.warns(RuntimeWarning, match="DROPPED"):
+                ops.attention_op(q, k, v, block_q=64, interpret=False)
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")  # second call: no warning
+                ops.attention_op(q, k, v, block_q=64, interpret=False)
+        assert ops.stats["ref_fallbacks"] == f0 + 2
+        assert ops.stats["dropped_configs"] == d0 + 2
+        assert prof.stats["ref_fallbacks"] == 2
+        assert prof.stats["dropped_configs"] == 2
+
+    def test_record_on_miss_tunes_and_publishes(self, mount):
+        from repro.kernels import ops
+        from repro.tune import autotune
+        prof = TuningProfile(backend="cpu-interpret")
+        prof.tune_on_miss = True
+        prof.store = ProfileStore(mount)
+        q, k, v = self._args(sq=16, d=8)
+        t0 = autotune.stats["tune_invocations"]
+        m0 = ops.stats["miss_tunes"]
+        with use_profile(prof):
+            ops.attention_op(q, k, v, interpret=True)
+        assert autotune.stats["tune_invocations"] == t0 + 1
+        assert ops.stats["miss_tunes"] == m0 + 1
+        assert prof.entries  # the tuned key landed
+        fetched = prof.store.fetch()  # and was published to the DFS
+        assert fetched is not None
+        assert fetched.digest() == prof.digest()
+
+    def test_supplied_kwargs_override_profile(self):
+        from repro.kernels import ops
+        prof = TuningProfile(backend="cpu-interpret")
+        key = ssd_key(s=32, h=2, p=16, g=1, n=16, dtype="float32",
+                      backend="cpu-interpret")
+        prof.record(key, {"chunk": 8})
+        with use_profile(prof):
+            cfg = ops._resolve("ssd", key, {"chunk": 4}, {"chunk": 256},
+                               {})
+        assert cfg == {"chunk": 4}
+
+
+# ---------------------------------------------------------------------------
+# launch profiles
+# ---------------------------------------------------------------------------
+
+
+class TestLaunchProfile:
+    def test_capture_roundtrip(self):
+        lp = capture_launch_profile({"LD_PRELOAD": "/x.so"})
+        from repro.tune.launchprofile import LaunchProfile
+        back = LaunchProfile.from_json(lp.to_json())
+        assert back.env["LD_PRELOAD"] == "/x.so"
+        assert back.env["JAX_ENABLE_X64"] is None
+
+    def test_no_drift_on_identical_env(self):
+        env = {"XLA_FLAGS": "--a --b"}
+        assert profile_drift(capture_launch_profile(env), env) == []
+
+    def test_xla_flags_compare_as_token_set(self):
+        lp = capture_launch_profile({"XLA_FLAGS": "--a --b"})
+        assert profile_drift(lp, {"XLA_FLAGS": "--b  --a --a"}) == []
+        drift = profile_drift(lp, {"XLA_FLAGS": "--a"})
+        assert drift and "XLA_FLAGS" in drift[0]
+
+    def test_unset_vs_set_is_drift(self):
+        lp = capture_launch_profile({"LD_PRELOAD": "/x.so"})
+        drift = profile_drift(lp, {})
+        assert any("LD_PRELOAD" in d for d in drift)
+
+    def test_invalid_profile_reports_not_raises(self):
+        assert profile_drift({"version": 42}) \
+            == ["invalid launch profile: unsupported launch profile: "
+                "{'version': 42}"]
+
+
+# ---------------------------------------------------------------------------
+# bootseer round trip: tune once, never again
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def boot_env(tmp_path):
+    from repro.blockstore.image import build_image
+    from repro.blockstore.registry import Registry
+    from repro.dfs.hdfs import HdfsCluster
+    rng = np.random.default_rng(0)
+    src = tmp_path / "src"
+    (src / "bin").mkdir(parents=True)
+    (src / "bin" / "start").write_bytes(
+        rng.integers(0, 256, 64 * 1024, dtype=np.uint8).tobytes())
+    reg = Registry(tmp_path / "reg")
+    build_image(src, reg, "img", block_size=64 * 1024)
+    hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=4,
+                       block_size=1 << 20)
+    return reg, hdfs
+
+
+def _boot_spec():
+    from repro.core.bootseer import JobSpec
+    return JobSpec(
+        job_id="tunejob", image="img", num_nodes=2,
+        job_params={"deps": ["a==1"]},
+        startup_reads=[("bin/start", 0, -1)],
+        env_setup=lambda target, rank:
+            (target / "dep.py").write_text("x=1"))
+
+
+class TestBootRoundTrip:
+    def test_warm_boot_has_zero_tune_invocations(self, boot_env,
+                                                 tmp_path):
+        from repro.core.bootseer import BootseerRuntime
+        reg, hdfs = boot_env
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "wd", optimize=True,
+                             tune=True) as rt:
+            r1 = rt.run_startup(_boot_spec())
+            assert r1.notes["tune_cache_hit"] is False
+            assert r1.notes["tune_invocations"] > 0
+            assert "tune_error" not in r1.notes
+            rt.drain_deferred()
+
+            r2 = rt.run_startup(_boot_spec())
+            assert r2.notes["tune_cache_hit"] is True
+            assert r2.notes["tune_invocations"] == 0
+            assert r2.notes["tune_profile_digest"] \
+                == r1.notes["tune_profile_digest"]
+            rt.drain_deferred()
+            assert rt.tune_store.stats["publishes"] == 1
+            # profile blob + HEAD live in the DFS next to the env cache
+            assert rt.mount.exists(HEAD_PATH)
+
+    def test_corrupt_dfs_profile_does_not_crash_boot(self, boot_env,
+                                                     tmp_path):
+        from repro.core.bootseer import BootseerRuntime
+        reg, hdfs = boot_env
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "wd", optimize=True,
+                             tune=True) as rt:
+            r1 = rt.run_startup(_boot_spec())
+            rt.drain_deferred()
+            rt.mount.write(HEAD_PATH, b"deadbeef")  # corrupt the pointer
+            r2 = rt.run_startup(_boot_spec())
+            rt.drain_deferred()
+            # the boot completed; the miss re-tuned and re-published
+            assert r2.notes["tune_cache_hit"] is False
+            assert r2.notes["tune_invocations"] > 0
+            assert "tune_error" not in r2.notes
+            assert r1.total_s > 0 and r2.total_s > 0
+
+    def test_launch_profile_drift_is_reported(self, boot_env, tmp_path,
+                                              monkeypatch):
+        from repro.core.bootseer import BootseerRuntime
+        reg, hdfs = boot_env
+        with BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "wd", optimize=True,
+                             tune=True) as rt:
+            r1 = rt.run_startup(_boot_spec())  # snapshot created here
+            rt.drain_deferred()
+            assert r1.notes["launch_profile_drift"] == {}
+            monkeypatch.setenv("LD_PRELOAD", "/opt/tcmalloc_drift.so")
+            r2 = rt.run_startup(_boot_spec())
+            rt.drain_deferred()
+            drift = r2.notes["launch_profile_drift"]
+            assert drift, "drifted LD_PRELOAD must be reported"
+            assert all(any("LD_PRELOAD" in line for line in lines)
+                       for lines in drift.values())
+
+    def test_simcluster_autotune_modelling(self):
+        from repro.simcluster.workload import StartupWorkload
+        base = StartupWorkload(bootseer=False, autotune=True).run(16, 1)
+        cold = StartupWorkload(bootseer=True, autotune=True).run(16, 0)
+        warm = StartupWorkload(bootseer=True, autotune=True).run(16, 1)
+        off = StartupWorkload(bootseer=False, autotune=False).run(16, 1)
+        assert base["tune_gating"] and not cold["tune_gating"]
+        assert warm["tune_cache_hit"] and not cold["tune_cache_hit"]
+        # the baseline pays the sweep on the critical path every boot
+        assert base["job_level"] > off["job_level"] \
+            + 0.9 * StartupWorkload().params.tune_sweep_s
+        # a warm bootseer boot pays a tiny non-gating fetch
+        assert warm["tune_s"] < 0.01

@@ -1,0 +1,106 @@
+"""Property tests (hypothesis) for the autotune subsystem:
+
+* any tuner-selectable launch config produces outputs allclose to the
+  pure-jnp oracles — across ragged/odd sequence lengths, bf16/f32 and
+  GQA ratios (the verify gate of the sweep can trust the kernels);
+* profile serialization: arbitrary byte corruption of a published
+  profile either round-trips identically or raises ProfileError — never
+  yields a silently different profile.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+from repro.kernels.ref import attention_reference, ssd_reference  # noqa: E402
+from repro.kernels.ssd import ssd_chunked_kernel  # noqa: E402
+from repro.tune.autotune import (CANDIDATE_BLOCKS,  # noqa: E402
+                                 CANDIDATE_CHUNKS, _ATOL)
+from repro.tune.profile import ProfileError, TuningProfile  # noqa: E402
+
+# interpret-mode kernels are slow: keep shapes tiny and examples few
+SET = dict(deadline=None, max_examples=12,
+           suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+DTYPES = ("float32", "bfloat16")
+
+
+class TestTunerConfigsMatchOracles:
+    @given(sq=st.integers(1, 48),
+           d=st.sampled_from((8, 16)),
+           g=st.sampled_from((1, 2, 4)),
+           causal=st.booleans(),
+           dtype=st.sampled_from(DTYPES),
+           bq=st.sampled_from(CANDIDATE_BLOCKS),
+           bk=st.sampled_from(CANDIDATE_BLOCKS),
+           seed=st.integers(0, 2 ** 8))
+    @settings(**SET)
+    def test_attention_any_candidate_allclose(self, sq, d, g, causal,
+                                              dtype, bq, bk, seed):
+        hkv = 2
+        hq = hkv * g
+        jt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, hq, sq, d)).astype(jt)
+        k = jax.random.normal(ks[1], (1, hkv, sq, d)).astype(jt)
+        v = jax.random.normal(ks[2], (1, hkv, sq, d)).astype(jt)
+        out = flash_attention(q, k, v, causal=causal, block_q=bq,
+                              block_k=bk, interpret=True)
+        ref = attention_reference(q, k, v, causal=causal)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err <= _ATOL["flash_attention"][dtype], \
+            f"sq={sq} d={d} g={g} cfg=({bq},{bk}) {dtype}: err {err}"
+
+    @given(s=st.integers(1, 70),
+           dtype=st.sampled_from(DTYPES),
+           chunk=st.sampled_from(CANDIDATE_CHUNKS),
+           seed=st.integers(0, 2 ** 8))
+    @settings(**SET)
+    def test_ssd_any_candidate_allclose(self, s, dtype, chunk, seed):
+        """Ragged lengths exercise the padded tail: with exact dt
+        masking the pad positions contribute nothing, so even
+        chunk >> s stays within tolerance (the satellite-1 fix)."""
+        b, h, p, g, n = 1, 2, 16, 1, 16
+        jt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.key(seed), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p)).astype(jt)
+        dt = jax.nn.softplus(
+            jax.random.normal(ks[1], (b, s, h))).astype(jt)
+        A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+        B = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(jt)
+        C = (jax.random.normal(ks[4], (b, s, g, n)) * 0.5).astype(jt)
+        D = jnp.ones((h,))
+        y, st_ = ssd_chunked_kernel(x, dt, A, B, C, D, chunk=chunk,
+                                    interpret=True)
+        y_ref, st_ref = ssd_reference(x, dt, A, B, C, D)
+        atol = _ATOL["ssd"][dtype]
+        for got, want in ((y, y_ref), (st_, st_ref)):
+            err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                        - want.astype(jnp.float32))))
+            assert err <= atol, \
+                f"s={s} chunk={chunk} {dtype}: err {err}"
+
+
+class TestProfileCorruption:
+    @given(pos=st.integers(0, 10 ** 6), bit=st.integers(0, 7))
+    @settings(deadline=None, max_examples=40)
+    def test_bitflip_never_yields_a_different_profile(self, pos, bit):
+        prof = TuningProfile(backend="cpu-interpret", created=123.0)
+        prof.record("flash_attention|sq32|sk32|d16|g2|c1|w0|f32|b",
+                    {"block_q": 32, "block_k": 16}, measured_s=0.5)
+        raw = bytearray(prof.to_json())
+        raw[pos % len(raw)] ^= 1 << bit
+        try:
+            back = TuningProfile.from_json(bytes(raw))
+        except ProfileError:
+            return  # rejected: the safe outcome
+        # survived the flip: must be byte-identical content
+        assert back.digest() == prof.digest()
+        assert back.payload() == prof.payload()
