@@ -1,21 +1,34 @@
 """§4.2 swarm benchmark — topology-aware block distribution vs naive
 per-node registry pulls, across 8-256 simulated nodes x 1-4 concurrent
-jobs.
+jobs x 1-4 regions.
 
 Each cell cold-starts ``jobs`` distinct images on ``nodes`` simulated
 nodes (one LazyImageClient per job x node, all sharing one Swarm) and
 reports: registry egress bytes vs the unique-block floor (the swarm
 keeps the ratio ~1.0; naive pulls would pay ``nodes``x), p50/p99 node
-warm time, and peer-link utilization split by rack tier.  Byte counts
-are deterministic (Registry accounting); wall times depend on the box.
+warm time, and peer-link utilization split by rack/region tier.  Byte
+counts are deterministic (Registry accounting); wall times depend on
+the box.
+
+With ``--regions R`` > 1, nodes partition into R named regions behind a
+per-pair WAN throttle; the federation gate checks that every region's
+EXTERNAL ingress (registry bytes its clients pulled + cross-region peer
+bytes, ``Swarm.region_ingress``) stays at ~1.0x the unique image bytes
+— i.e. each region crosses the WAN once per block, then serves itself
+region-locally.  ``--max-cross-ratio`` turns that into a hard gate
+(exit 2); warm-latency ratios vs the same-size single-region cell are
+reported whenever a ``--regions 1`` cell ran in the same sweep.
 
     PYTHONPATH=src python benchmarks/bench_swarm.py --json bench.json
+    PYTHONPATH=src python benchmarks/bench_swarm.py \
+        --nodes 32 --jobs 1 --regions 1 2 4 --max-cross-ratio 1.1
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import tempfile
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -27,19 +40,37 @@ from repro.blockstore.image import build_image
 from repro.blockstore.lazy import LazyImageClient
 from repro.blockstore.registry import Registry
 from repro.blockstore.swarm import Swarm, Topology
+from repro.dfs.hdfs import ThrottleModel
 
 try:
     from benchmarks.common import emit
 except ModuleNotFoundError:  # script mode: put the repo root on sys.path
-    import sys
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
     from benchmarks.common import emit
 
+REGION_NAMES = ("us", "eu", "ap", "jp")
+
+
+def _region_name(r: int) -> str:
+    return REGION_NAMES[r] if r < len(REGION_NAMES) else f"r{r}"
+
 
 def _cell(nodes: int, jobs: int, *, blocks: int, block_kib: int,
-          nodes_per_rack: int, threads: int) -> dict:
+          nodes_per_rack: int, threads: int, regions: int = 1) -> dict:
     bs = block_kib * 1024
-    rng = np.random.default_rng((nodes, jobs))
+    rng = np.random.default_rng((nodes, jobs, regions))
+    per_region = -(-nodes // max(regions, 1))   # contiguous node blocks
+
+    def node_id(i: int) -> str:
+        if regions <= 1:
+            return f"node{i:04d}"
+        r = min(i // per_region, regions - 1)
+        return f"{_region_name(r)}-node{i:04d}"
+
+    def region_of(i: int) -> str:
+        return (_region_name(min(i // per_region, regions - 1))
+                if regions > 1 else "region0")
+
     with tempfile.TemporaryDirectory() as d:
         tmp = Path(d)
         reg = Registry(tmp / "reg")
@@ -53,19 +84,32 @@ def _cell(nodes: int, jobs: int, *, blocks: int, block_kib: int,
             manifests.append(build_image(src, reg, f"img{j}",
                                          block_size=bs))
         unique = sum(m.unique_block_bytes for m in manifests)
-        swarm = Swarm(Topology(nodes_per_rack=nodes_per_rack))
+        # every WAN region pair shares one modelled link (~1 ms per
+        # 16 KiB block at these rates): enough to make cross-region
+        # serves measurably slower than LAN ones without dominating the
+        # cell's wall time
+        cross_region = (ThrottleModel(bandwidth=16e6, throttle_after=1 << 30,
+                                      timescale=1.0)
+                        if regions > 1 else None)
+        swarm = Swarm(Topology(nodes_per_rack=nodes_per_rack),
+                      cross_region=cross_region)
         tasks = [(j, i) for j in range(jobs) for i in range(nodes)]
 
         warm_s = {}
+        clients_by_region: dict[str, list] = {}
+        reglock = __import__("threading").Lock()
 
         def cold_start(task):
             j, i = task
             man = manifests[j]
             c = LazyImageClient(
-                man, reg, tmp / f"j{j}n{i}", node_id=f"node{i:04d}",
+                man, reg, tmp / f"j{j}n{i}", node_id=node_id(i),
                 peers=swarm, client_id=f"job{j}/n{i}")
+            with reglock:
+                clients_by_region.setdefault(region_of(i), []).append(c)
             t0 = time.perf_counter()
-            for h in swarm.rarest_first(sorted(man.unique_blocks)):
+            for h in swarm.rarest_first(sorted(man.unique_blocks),
+                                        requester=c):
                 c.ensure_block(h)
             warm_s[(j, i)] = time.perf_counter() - t0
 
@@ -74,48 +118,136 @@ def _cell(nodes: int, jobs: int, *, blocks: int, block_kib: int,
             list(ex.map(cold_start, tasks))
         wall = time.perf_counter() - t0
 
+        # warm-region probe: once every region holds the blocks, a fresh
+        # client's full image fetch should be LAN-bound in EVERY region
+        # (no WAN in the path) — this is the latency the federation gate
+        # compares against the single-region baseline
+        probe_warm = {}
+        man = manifests[0]
+        for r in range(max(regions, 1)):
+            rname = _region_name(r) if regions > 1 else "region0"
+            i = min((r + 1) * per_region, nodes) - 1 if regions > 1 else 0
+            best = float("inf")
+            for rep in range(2):      # best-of-2 damps scheduler noise
+                c = LazyImageClient(
+                    man, reg, tmp / f"probe_r{r}_{rep}", node_id=node_id(i),
+                    peers=swarm, client_id=f"probe/{rname}/{rep}")
+                t0 = time.perf_counter()
+                for h in sorted(man.unique_blocks):
+                    c.ensure_block(h)
+                best = min(best, time.perf_counter() - t0)
+                assert c.stats["registry_fetches"] == 0, \
+                    "warm probe should never reach the registry"
+            probe_warm[rname] = best
+
         egress = reg.stats["bytes_served"]
         times = sorted(warm_s.values())
         peer_bytes = {k: v["bytes"] for k, v in swarm.link_stats.items()}
         total_peer = sum(peer_bytes.values())
+        # per-region external ingress: registry bytes the region's own
+        # clients pulled + peer bytes imported over cross-region links —
+        # with federation working, each region pays ~1.0x unique bytes
+        region_stats = {}
+        for rname, clients in sorted(clients_by_region.items()):
+            registry_bytes = sum(c.stats["registry_bytes"] for c in clients)
+            ingress = swarm.region_ingress.get(rname, {}).get("bytes", 0)
+            region_stats[rname] = {
+                "clients": len(clients),
+                "registry_bytes": registry_bytes,
+                "cross_region_ingress_bytes": ingress,
+                "external_bytes": registry_bytes + ingress,
+                "external_ratio": round(
+                    (registry_bytes + ingress) / max(unique, 1), 4),
+            }
+        max_ratio = max((rs["external_ratio"]
+                         for rs in region_stats.values()), default=0.0)
         return {
-            "nodes": nodes, "jobs": jobs,
+            "nodes": nodes, "jobs": jobs, "regions": regions,
             "unique_bytes": unique,
             "registry_egress_bytes": egress,
             "egress_ratio": round(egress / max(unique, 1), 4),
             "naive_egress_bytes": nodes * unique,
             "warm_s_p50": round(float(np.percentile(times, 50)), 4),
             "warm_s_p99": round(float(np.percentile(times, 99)), 4),
+            "probe_warm_s": {k: round(v, 4)
+                             for k, v in sorted(probe_warm.items())},
+            "probe_warm_s_max": round(max(probe_warm.values()), 4),
             "wall_s": round(wall, 4),
             "peer_link_bytes": peer_bytes,
             "intra_rack_fraction": round(
                 peer_bytes["intra_rack"] / max(total_peer, 1), 4),
+            "cross_region_fraction": round(
+                peer_bytes["cross_region"] / max(total_peer, 1), 4),
+            "region_stats": region_stats,
+            "max_region_ingress_ratio": round(max_ratio, 4),
             "coalesced_fetches": swarm.coalesced_fetches,
             "rearmed_fetches": swarm.rearmed_fetches,
         }
 
 
-def run(nodes=(8, 32, 64, 128, 256), jobs=(1, 4), *, blocks: int = 24,
-        block_kib: int = 16, nodes_per_rack: int = 8, threads: int = 32,
+def run(nodes=(8, 32, 64, 128, 256), jobs=(1, 4), regions=(1,), *,
+        blocks: int = 24, block_kib: int = 16, nodes_per_rack: int = 8,
+        threads: int = 32, max_cross_ratio: float = None,
         json_path=None):
     report = {"blocks_per_image": blocks, "block_kib": block_kib,
-              "nodes_per_rack": nodes_per_rack, "cells": []}
+              "nodes_per_rack": nodes_per_rack,
+              "max_cross_ratio": max_cross_ratio, "cells": [],
+              "violations": []}
     rows = []
-    for j in jobs:
-        for n in nodes:
-            cell = _cell(n, j, blocks=blocks, block_kib=block_kib,
-                         nodes_per_rack=nodes_per_rack, threads=threads)
-            report["cells"].append(cell)
-            rows.append((
-                f"swarm.egress_ratio.n{n}_j{j}",
-                cell["egress_ratio"],
-                f"naive {n}x; warm p50 {cell['warm_s_p50']}s "
-                f"p99 {cell['warm_s_p99']}s, "
-                f"intra-rack {cell['intra_rack_fraction']:.0%}"))
+    base_probe = {}                   # (nodes, jobs) -> 1-region probe s
+    for r in regions:
+        for j in jobs:
+            for n in nodes:
+                if r > n:
+                    continue
+                cell = _cell(n, j, blocks=blocks, block_kib=block_kib,
+                             nodes_per_rack=nodes_per_rack,
+                             threads=threads, regions=r)
+                if r == 1:
+                    base_probe[(n, j)] = cell["probe_warm_s_max"]
+                elif (n, j) in base_probe:
+                    # warm-region fetch latency vs the single-region
+                    # baseline: all probes are LAN-bound, so this should
+                    # sit near 1.0x regardless of the WAN throttle
+                    cell["warm_latency_ratio_vs_1region"] = round(
+                        cell["probe_warm_s_max"]
+                        / max(base_probe[(n, j)], 1e-9), 4)
+                report["cells"].append(cell)
+                suffix = f"n{n}_j{j}" + (f"_r{r}" if r > 1 else "")
+                if r == 1:
+                    rows.append((
+                        f"swarm.egress_ratio.{suffix}",
+                        cell["egress_ratio"],
+                        f"naive {n}x; warm p50 {cell['warm_s_p50']}s "
+                        f"p99 {cell['warm_s_p99']}s, "
+                        f"intra-rack {cell['intra_rack_fraction']:.0%}"))
+                else:
+                    note = (f"registry {cell['egress_ratio']}x; "
+                            f"warm p50 {cell['warm_s_p50']}s, "
+                            f"cross-region "
+                            f"{cell['cross_region_fraction']:.0%} of "
+                            f"peer bytes")
+                    lat = cell.get("warm_latency_ratio_vs_1region")
+                    if lat is not None:
+                        note += f", latency {lat}x vs 1 region"
+                    rows.append((
+                        f"swarm.region_ingress_ratio.{suffix}",
+                        cell["max_region_ingress_ratio"], note))
+                if (max_cross_ratio is not None and r > 1
+                        and cell["max_region_ingress_ratio"]
+                        > max_cross_ratio):
+                    report["violations"].append(
+                        f"{suffix}: max region ingress ratio "
+                        f"{cell['max_region_ingress_ratio']} > "
+                        f"{max_cross_ratio} (a region re-crossed the "
+                        f"WAN for blocks it already held)")
     if json_path:
         Path(json_path).write_text(json.dumps(report, indent=2))
     emit(rows, f"Swarm image distribution (nodes {list(nodes)} x jobs "
-               f"{list(jobs)}, {blocks}x{block_kib}KiB blocks/image)")
+               f"{list(jobs)} x regions {list(regions)}, "
+               f"{blocks}x{block_kib}KiB blocks/image)")
+    for v in report["violations"]:
+        print(f"GATE FAIL: {v}")
     return report
 
 
@@ -124,16 +256,26 @@ def main():
     ap.add_argument("--nodes", type=int, nargs="*",
                     default=[8, 32, 64, 128, 256])
     ap.add_argument("--jobs", type=int, nargs="*", default=[1, 4])
+    ap.add_argument("--regions", type=int, nargs="*", default=[1],
+                    help="region counts to sweep (2-4 exercises the "
+                         "federated WAN tier)")
     ap.add_argument("--blocks", type=int, default=24)
     ap.add_argument("--block-kib", type=int, default=16)
     ap.add_argument("--nodes-per-rack", type=int, default=8)
     ap.add_argument("--threads", type=int, default=32)
+    ap.add_argument("--max-cross-ratio", type=float, default=None,
+                    help="fail (exit 2) if any region's external ingress "
+                         "exceeds this multiple of unique image bytes")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
-    run(nodes=tuple(args.nodes), jobs=tuple(args.jobs),
-        blocks=args.blocks, block_kib=args.block_kib,
-        nodes_per_rack=args.nodes_per_rack, threads=args.threads,
-        json_path=args.json or None)
+    report = run(nodes=tuple(args.nodes), jobs=tuple(args.jobs),
+                 regions=tuple(args.regions), blocks=args.blocks,
+                 block_kib=args.block_kib,
+                 nodes_per_rack=args.nodes_per_rack, threads=args.threads,
+                 max_cross_ratio=args.max_cross_ratio,
+                 json_path=args.json or None)
+    if report["violations"]:
+        sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -65,7 +65,8 @@ class LazyImageClient:
         self._trace: list[dict] = []
         self._t0 = time.perf_counter()
         self.stats = {"hits": 0, "misses": 0, "peer_fetches": 0,
-                      "registry_fetches": 0, "bytes_fetched": 0}
+                      "registry_fetches": 0, "registry_bytes": 0,
+                      "bytes_fetched": 0}
         if peers is not None:
             # an evicted block must leave the availability index the
             # moment it leaves disk; keyed by client_id so a warm
@@ -160,6 +161,10 @@ class LazyImageClient:
                 self.peers.abandon(h, self)
             raise
         self.stats["registry_fetches"] += 1
+        # registry bytes separately from peer bytes: with a multi-region
+        # topology these are the WAN-origin bytes a region's egress
+        # budget is measured against (bench_swarm --regions)
+        self.stats["registry_bytes"] += len(data)
         try:
             self._store(h, data, job=job)
             if self.peers is not None:

@@ -46,6 +46,7 @@ from repro.dfs.fuse import HdfsFuseMount
 from repro.dfs.hdfs import HdfsCluster
 from repro.envcache.snapshot import EnvCache, job_cache_key, snapshot_dir
 from repro.fabric.cache import NodeCache
+from repro.fabric.federation import RegionReplicator
 from repro.tune import (ProfileStore, capture_launch_profile,
                         profile_drift)
 
@@ -98,6 +99,7 @@ class BootseerRuntime:
                  analysis: Optional[StageAnalysisService] = None,
                  hot_threads: int = 8, ckpt_threads: int = 8,
                  stripe_width: int = 8, nodes_per_rack: int = 8,
+                 topology: Optional[Topology] = None,
                  pipeline: bool = True,
                  hot_root: Optional[str | Path] = None,
                  io_tokens: Optional[dict] = None,
@@ -150,9 +152,12 @@ class BootseerRuntime:
         # ONE swarm per runtime, shared by every job/run: membership is
         # keyed by client identity (job+node+digest) and blocks are
         # content-addressed, so concurrent jobs coexist, warm restarts
-        # rejoin, and block dedup serves across images
-        self.swarm = (Swarm(Topology(nodes_per_rack=nodes_per_rack))
-                      if optimize else None)
+        # rejoin, and block dedup serves across images.  A caller-built
+        # ``topology`` (region pins, region_fn, per-link throttles live
+        # on the Swarm) turns this into a multi-region federated swarm.
+        self.swarm = (
+            Swarm(topology or Topology(nodes_per_rack=nodes_per_rack))
+            if optimize else None)
         self._run_counter: dict[str, int] = {}
         # one long-lived I/O pool shared by every node's prefetch across
         # runs: thread-spawn cost is paid once per runtime, and total
@@ -201,6 +206,18 @@ class BootseerRuntime:
                   if err is not None]
         if errors:
             raise errors[0]
+
+    def region_replicator(self, **kwargs) -> RegionReplicator:
+        """A :class:`~repro.fabric.federation.RegionReplicator` bound to
+        this runtime's swarm and hot-block service.  Register each
+        region's swarm-attached clients on it, then ``start()`` (or call
+        ``replicate_once()`` between startups) to pre-stage hot blocks
+        region-locally at DEFERRED priority — the caller owns ``stop()``.
+        """
+        if self.swarm is None:
+            raise ValueError(
+                "region replication needs optimize=True (no swarm)")
+        return RegionReplicator(self.swarm, self.hot_service, **kwargs)
 
     def close(self):
         """Release the runtime's worker pools (idempotent).  Does not

@@ -92,11 +92,22 @@ class HdfsCluster:
 
     def __init__(self, root: str | Path, num_groups: int = 8,
                  block_size: int = DEFAULT_BLOCK,
-                 throttle: Optional[ThrottleModel] = None):
+                 throttle: Optional[ThrottleModel] = None,
+                 num_regions: int = 1):
         self.root = Path(root)
         self.num_groups = num_groups
         self.block_size = block_size
         self.throttle = throttle
+        # region tier over the DataNode groups: contiguous runs of
+        # num_groups // num_regions groups form one region each (the
+        # remainder folds into the last region).  Region-spread
+        # replicated placement (repro.fabric.placement) uses this to put
+        # each mirror a whole region away from its data file.
+        if not 1 <= num_regions <= num_groups:
+            raise ValueError(
+                f"num_regions must be in [1, num_groups={num_groups}], "
+                f"got {num_regions}")
+        self.num_regions = num_regions
         self._meta: dict[str, FileMeta] = {}
         self._lock = threading.Lock()
         self._counter = 0
@@ -156,6 +167,17 @@ class HdfsCluster:
 
     def _block_file(self, bm: BlockMeta) -> Path:
         return self.root / f"group{bm.group:02d}" / bm.path
+
+    def group_region(self, group: int) -> int:
+        """The region index a DataNode group belongs to (contiguous
+        partition; the remainder groups fold into the last region)."""
+        gpr = max(self.num_groups // self.num_regions, 1)
+        return min(group // gpr, self.num_regions - 1)
+
+    def region_stride(self) -> int:
+        """Groups per region — the offset that moves a placement one
+        whole region over."""
+        return max(self.num_groups // self.num_regions, 1)
 
     # ----- byte accounting -----
 

@@ -199,10 +199,25 @@ class StripedWriter:
         self._replicas: list[list[tuple[int, str]]] = []
         self._replica_handles: list[list] = []
         if self.placement.kind == REPLICATED:
+            # region-spread: each mirror jumps a whole region of groups,
+            # so replica r lives in region (data_region + r + 1) — a
+            # lost region still leaves a full copy, and a remote
+            # region's reader fails over to a region-LOCAL mirror.
+            # Falls back to the adjacent-group layout on single-region
+            # clusters (where the stride would degenerate to 0 mod n).
+            spread = (self.placement.region_spread
+                      and hdfs.num_regions > 1)
+            stride = hdfs.region_stride() if spread else 1
             for f in range(self.width):
                 names, handles = [], []
                 for r in range(self.placement.replicas):
-                    group = (self._files[f][0] + r + 1) % hdfs.num_groups
+                    group = (self._files[f][0]
+                             + (r + 1) * stride) % hdfs.num_groups
+                    if group == self._files[f][0]:
+                        # stride wrapped a full lap (replicas >= regions
+                        # or >= groups): never mirror into the data
+                        # file's own group
+                        group = (group + 1) % hdfs.num_groups
                     name = f"stripe_{tag:08d}_{f}r{r}"
                     names.append((group, name))
                     handles.append(hdfs.open_group_file(group, name, "wb"))
@@ -327,6 +342,7 @@ class StripedWriter:
         elif placement.kind == REPLICATED:
             placement = Placement(kind=REPLICATED,
                                   replicas=placement.replicas,
+                                  region_spread=placement.region_spread,
                                   replica_files=tuple(
                                       tuple(r) for r in self._replicas))
         meta = self._meta_for(self._size)
@@ -366,9 +382,16 @@ class StripedReader:
     def __init__(self, hdfs: HdfsCluster, path: str,
                  threads: Optional[int] = None,
                  pool: Optional[ThreadPoolExecutor] = None,
-                 sched=None, priority: int = 0):
+                 sched=None, priority: int = 0,
+                 prefer_region: Optional[int] = None):
         self.hdfs = hdfs
         self.path = path
+        # region-local reads: with region-spread replicated placement, a
+        # reader in DataNode region ``prefer_region`` serves each stripe
+        # from whichever copy (primary or mirror) lives in its own
+        # region, so a remote region's restore never crosses the WAN for
+        # data it has a local mirror of.  None keeps primary-first.
+        self.prefer_region = prefer_region
         attrs = hdfs.attrs(path)
         raw = attrs["striped"]
         self.meta = StripedMeta(size=raw["size"], width=raw["width"],
@@ -481,25 +504,37 @@ class StripedReader:
 
         def read_file_inner(f):
             group, name = self.meta.files[f]
-            try:
-                self._read_subs(f, group, name, jobs[f], views)
-                return
-            except StripeMissingError as primary:
-                if self.placement.kind != REPLICATED:
-                    raise
+            candidates = [(group, name)]
+            if self.placement.kind == REPLICATED:
                 replicas = (self.placement.replica_files[f]
                             if f < len(self.placement.replica_files) else ())
-                for rg, rn in replicas:
-                    try:
-                        self._read_subs(f, rg, rn, jobs[f], views)
-                    except StripeMissingError:
-                        continue
+                candidates += [tuple(r) for r in replicas]
+                if self.prefer_region is not None:
+                    # region-local copies first (stable: primary-before-
+                    # mirror within each region class).  A mirror read
+                    # chosen for locality is NOT a degraded read — only
+                    # falling past a FAILED primary is.
+                    candidates.sort(key=lambda gn: self.hdfs.group_region(
+                        gn[0]) != self.prefer_region)
+            primary_failed = False
+            last_err = None
+            for g, n in candidates:
+                try:
+                    self._read_subs(f, g, n, jobs[f], views)
+                except StripeMissingError as err:
+                    last_err = err
+                    if (g, n) == (group, name):
+                        primary_failed = True
+                        if self.placement.kind != REPLICATED:
+                            raise
+                    continue
+                if (g, n) != (group, name) and primary_failed:
                     self._account_fabric(degraded_reads=1)
-                    return
-                raise StripeMissingError(
-                    self.path, file_index=f, group=group, name=name,
-                    detail=f"missing and all {len(replicas)} replicas "
-                           "are missing or truncated") from primary
+                return
+            raise StripeMissingError(
+                self.path, file_index=f, group=group, name=name,
+                detail=f"missing and all {len(candidates) - 1} replicas "
+                       "are missing or truncated") from last_err
 
         # single-file calls (sub-stripe ranges) skip the pool entirely
         if len(jobs) == 1:

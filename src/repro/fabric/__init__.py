@@ -2,17 +2,20 @@
 for every BootSeer storage consumer (blockstore, envcache, striped DFS).
 
 See repro.fabric.cache (NodeCache + eviction policies),
-repro.fabric.placement (striped / replicated / erasure strategies) and
+repro.fabric.placement (striped / replicated / erasure strategies),
+repro.fabric.federation (cross-region hot-block replication) and
 repro.fabric.gf256 (the Reed-Solomon kernel).
 """
 
 from repro.fabric.cache import (EvictionPolicy, HotScorePolicy, LRUPolicy,
                                 NodeCache)
+from repro.fabric.federation import RegionReplicator
 from repro.fabric.gf256 import rs_decode, rs_encode
 from repro.fabric.placement import ERASURE, REPLICATED, STRIPED, Placement
 
 __all__ = [
     "EvictionPolicy", "HotScorePolicy", "LRUPolicy", "NodeCache",
     "Placement", "STRIPED", "REPLICATED", "ERASURE",
+    "RegionReplicator",
     "rs_encode", "rs_decode",
 ]

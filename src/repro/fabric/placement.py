@@ -43,6 +43,14 @@ class Placement:
     replicas: int = 1          # replicated: mirror copies per data file
     parity: int = 2            # erasure: m parity files
     verify: bool = True        # erasure: CRC-check chunks on read
+    # replicated: place each mirror a whole REGION stride away from its
+    # data file (HdfsCluster.num_regions partitions the DataNode groups
+    # into region tiers), so losing an entire region's groups still
+    # leaves a full copy elsewhere and a remote region's restore reads
+    # its own region-local mirror instead of crossing the WAN.  With
+    # num_regions == 1 this is a no-op (the classic adjacent-group
+    # mirror layout).
+    region_spread: bool = False
 
     # filled in by the writer at close():
     replica_files: tuple = ()  # per data file: ((group, name), ...)
@@ -69,8 +77,10 @@ class Placement:
         return cls(kind=STRIPED)
 
     @classmethod
-    def replicated(cls, replicas: int = 1) -> "Placement":
-        return cls(kind=REPLICATED, replicas=replicas)
+    def replicated(cls, replicas: int = 1, *,
+                   region_spread: bool = False) -> "Placement":
+        return cls(kind=REPLICATED, replicas=replicas,
+                   region_spread=region_spread)
 
     @classmethod
     def erasure(cls, parity: int = 2, *, verify: bool = True) -> "Placement":
@@ -97,6 +107,7 @@ class Placement:
         out = {"kind": self.kind}
         if self.kind == REPLICATED:
             out["replicas"] = self.replicas
+            out["region_spread"] = self.region_spread
             out["replica_files"] = [list(map(list, fs))
                                     for fs in self.replica_files]
         else:
@@ -120,6 +131,7 @@ class Placement:
         if raw["kind"] == REPLICATED:
             return cls(
                 kind=REPLICATED, replicas=raw.get("replicas", 1),
+                region_spread=raw.get("region_spread", False),
                 replica_files=tuple(
                     tuple(tuple(f) for f in fs)
                     for fs in raw.get("replica_files", [])))

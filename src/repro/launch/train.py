@@ -60,6 +60,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--regions", type=int, default=1,
+                    help="region tier for the swarm: node ranks stripe "
+                         "over this many regions (cross-region fetches "
+                         "ride the WAN tier exactly once per block)")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--workdir", default="/tmp/bootseer_job")
     ap.add_argument("--no-bootseer", action="store_true",
@@ -90,8 +94,18 @@ def main():
         env_setup=env_setup, resume_step=resume,
         resume_plan="rows")
 
+    topology = None
+    if args.regions > 1:
+        from repro.blockstore.swarm import Topology
+
+        def region_fn(node_id, _n=args.regions):
+            digits = "".join(ch for ch in node_id if ch.isdigit())
+            return f"region{int(digits or 0) % _n}"
+
+        topology = Topology(region_fn=region_fn)
+
     rt = BootseerRuntime(registry=reg, hdfs=hdfs, workdir=root / "rt",
-                         optimize=not args.no_bootseer)
+                         optimize=not args.no_bootseer, topology=topology)
     print(f"== startup ({'baseline' if args.no_bootseer else 'BootSeer'}"
           f"{', resume@' + str(resume) if resume else ', cold'}) ==")
     res = rt.run_startup(spec, checkpointer=ck)

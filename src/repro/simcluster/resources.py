@@ -44,6 +44,31 @@ class Transfer:
     p2p_bonus_per_done: float = 0.0
 
 
+def wan_links(num_regions: int, *, capacity: float, per_link: float,
+              asymmetry: float = 1.0,
+              share_group: str = "wan") -> dict[int, FluidResource]:
+    """Per-region WAN ingress links for a federated (multi-region) swarm.
+
+    Region 0 hosts the registry/seed; each other region r pulls its seed
+    copy over ONE logical WAN link.  All links draw from a single shared
+    backbone ``capacity`` pool (``share_group``), while each region's
+    per-transfer cap models its own link rate: ``per_link`` for region 1,
+    degraded by ``asymmetry`` per additional region hop (region r gets
+    ``per_link * asymmetry**(r-1)``) — the bandwidth asymmetry of real
+    WAN topologies, where far regions ride thinner or more contended
+    pipes.  Returns {region_index: FluidResource} for regions 1..n-1.
+    """
+    if num_regions < 1:
+        raise ValueError(f"num_regions must be >= 1, got {num_regions}")
+    if not 0.0 < asymmetry <= 1.0:
+        raise ValueError(f"asymmetry must be in (0, 1], got {asymmetry}")
+    return {
+        r: FluidResource(f"wan_r{r}", capacity,
+                         per_link * asymmetry ** (r - 1),
+                         share_group=share_group)
+        for r in range(1, num_regions)}
+
+
 def dissemination_waves(n: int, fanout: int) -> list[int]:
     """Wave index (1-based) for each of ``n`` receivers fed from ONE
     initial holder through a bounded-degree tree: every completed receiver

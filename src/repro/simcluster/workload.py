@@ -21,7 +21,8 @@ import numpy as np
 from repro.core.stages import Stage, StartupTask
 from repro.simcluster.resources import (FluidResource, Transfer,
                                         dissemination_waves,
-                                        simulate_overlapped, simulate_stage)
+                                        simulate_overlapped, simulate_stage,
+                                        wan_links)
 
 GB = 1024 ** 3
 MB = 1024 ** 2
@@ -46,6 +47,15 @@ class ClusterParams:
     nodes_per_rack: int = 8
     rack_uplink: float = 3.0 * GB      # cross-rack per-link rate
     swarm_fanout: int = 4              # serve-slot bound per warm holder
+    # multi-region federation: racks partition contiguously into regions;
+    # region 0 hosts the registry, every other region imports the hot set
+    # exactly ONCE over its WAN link (region-tier swarm replication turns
+    # all later fetches rack-/region-local).  WAN links share one backbone
+    # pool; per-link rate degrades by wan_asymmetry per region hop.
+    num_regions: int = 1
+    wan_capacity: float = 6.0 * GB     # shared WAN backbone egress pool
+    wan_per_link: float = 1.2 * GB     # region-1 ingress link rate
+    wan_asymmetry: float = 0.6         # per-extra-region link degradation
 
     # environment setup (§3.2: 100-300 s; §3.4: SCM throttling)
     install_exec_s: float = 95.0       # local pip/exec work
@@ -185,14 +195,25 @@ class StartupWorkload:
         jit = self._jitter(rng, num_nodes)
         transfers, extra = [], {}
         registry_egress = 0.0
+        wan_ingress: dict[str, float] = {}
+        eff_regions = 1                  # regions clamp to the rack count
         if warm:
-            # §4.2 swarm: ONE global seed pulls the hot set from the
-            # registry (egress is O(unique bytes), not O(nodes)); rack
-            # seeds replicate cross-rack through a bounded-fanout tree;
-            # everyone else fans out intra-rack the same way.
+            # §4.2 swarm, region tier on top: ONE global seed pulls the
+            # hot set from the registry (egress is O(unique bytes), not
+            # O(nodes)); each NON-SEED region imports it exactly once
+            # over its WAN link (the region-tier federation property);
+            # region seeds replicate cross-rack through a bounded-fanout
+            # tree; everyone else fans out intra-rack the same way.
             rack_n = max(p.nodes_per_rack, 1)
             racks = [nodes[i:i + rack_n]
                      for i in range(0, num_nodes, rack_n)]
+            nregions = eff_regions = max(1, min(p.num_regions, len(racks)))
+            per, rem = divmod(len(racks), nregions)
+            region_rack_idx, start = [], 0
+            for reg in range(nregions):
+                cnt = per + (1 if reg < rem else 0)
+                region_rack_idx.append(list(range(start, start + cnt)))
+                start += cnt
             seed_rate = min(p.node_nic, p.registry_capacity)
             cross_rate = min(p.node_nic, p.rack_uplink)
             peer_rate = min(p.node_nic, p.p2p_bonus)
@@ -202,43 +223,65 @@ class StartupWorkload:
             registry_egress = hot
             registry = FluidResource("registry", p.registry_capacity,
                                      p.node_nic)
-            cross_waves = dissemination_waves(len(racks) - 1,
-                                              p.swarm_fanout)
-            # ONE FluidResource per (tier, wave): simulate_stage pools
-            # transfers sharing a resource, so every member of a wave
-            # must reference the same object, sized to the whole wave
-            cross_res = {
-                w: FluidResource(f"cross_w{w}",
-                                 cross_waves.count(w) * cross_rate,
-                                 cross_rate)
-                for w in set(cross_waves)}
-            for r, rack in enumerate(racks):
-                if r == 0:
-                    seed_start, seed_res = 0.0, registry
-                    rack_seed_done = seed_t
+            wan = wan_links(nregions, capacity=p.wan_capacity,
+                            per_link=p.wan_per_link,
+                            asymmetry=p.wan_asymmetry)
+            for reg, rack_idx in enumerate(region_rack_idx):
+                if not rack_idx:
+                    continue
+                if reg == 0:
+                    region_start, region_res = 0.0, registry
+                    region_seed_t = seed_t
                 else:
-                    w = cross_waves[r - 1]
-                    seed_start = seed_t + (w - 1) * cross_t
-                    rack_seed_done = seed_start + cross_t
-                    seed_res = cross_res[w]
-                i = r * rack_n
-                transfers.append(Transfer(
-                    rack[0], seed_res, hot,
-                    start=seed_start + 0.3 * jit[i]))
-                intra_waves = dissemination_waves(len(rack) - 1,
+                    # WAN import departs once the region-0 seed holds
+                    # the bytes; the asymmetric per-link rate sets the
+                    # region's one-time import latency
+                    wan_rate = min(p.node_nic,
+                                   p.wan_per_link
+                                   * p.wan_asymmetry ** (reg - 1))
+                    region_start, region_res = seed_t, wan[reg]
+                    region_seed_t = hot / wan_rate
+                    wan_ingress[f"region{reg}"] = hot
+                region_seed_done = region_start + region_seed_t
+                cross_waves = dissemination_waves(len(rack_idx) - 1,
                                                   p.swarm_fanout)
-                intra_res = {
-                    w: FluidResource(f"rack{r}_w{w}",
-                                     intra_waves.count(w) * peer_rate,
-                                     peer_rate)
-                    for w in set(intra_waves)}
-                for k, node in enumerate(rack[1:]):
-                    w = intra_waves[k]
-                    i = r * rack_n + k + 1
+                # ONE FluidResource per (region, tier, wave):
+                # simulate_stage pools transfers sharing a resource, so
+                # every member of a wave must reference the same object,
+                # sized to the whole wave
+                cross_res = {
+                    w: FluidResource(f"reg{reg}_cross_w{w}",
+                                     cross_waves.count(w) * cross_rate,
+                                     cross_rate)
+                    for w in set(cross_waves)}
+                for k, r in enumerate(rack_idx):
+                    rack = racks[r]
+                    if k == 0:
+                        seed_start, seed_res = region_start, region_res
+                        rack_seed_done = region_seed_done
+                    else:
+                        w = cross_waves[k - 1]
+                        seed_start = region_seed_done + (w - 1) * cross_t
+                        rack_seed_done = seed_start + cross_t
+                        seed_res = cross_res[w]
+                    i = r * rack_n
                     transfers.append(Transfer(
-                        node, intra_res[w], hot,
-                        start=(rack_seed_done + (w - 1) * peer_t
-                               + 0.3 * jit[i])))
+                        rack[0], seed_res, hot,
+                        start=seed_start + 0.3 * jit[i]))
+                    intra_waves = dissemination_waves(len(rack) - 1,
+                                                      p.swarm_fanout)
+                    intra_res = {
+                        w: FluidResource(f"rack{r}_w{w}",
+                                         intra_waves.count(w) * peer_rate,
+                                         peer_rate)
+                        for w in set(intra_waves)}
+                    for k2, node in enumerate(rack[1:]):
+                        w = intra_waves[k2]
+                        i = r * rack_n + k2 + 1
+                        transfers.append(Transfer(
+                            node, intra_res[w], hot,
+                            start=(rack_seed_done + (w - 1) * peer_t
+                                   + 0.3 * jit[i])))
             for i, node in enumerate(nodes):
                 extra[node] = p.container_start_s * jit[i]
         else:
@@ -366,6 +409,9 @@ class StartupWorkload:
                 "job_level": job_level, "pipelined": pipelined,
                 "critical_path": critical_path,
                 "registry_egress_bytes": registry_egress,
+                "num_regions": eff_regions,
+                "wan_ingress_bytes": wan_ingress,
+                "cross_region_bytes": sum(wan_ingress.values()),
                 "read_amplification": read_amp,
                 "restore_ahead_local_bytes": covered * num_nodes,
                 "tune_s": tune_s, "tune_gating": tune_gating,

@@ -658,3 +658,88 @@ class TestReservationRollback:
             cache.fetch_path("c", lambda tmp: (_ for _ in ()).throw(
                 RuntimeError("producer died")))
         assert "c" in cache._flights
+
+
+# ---------------------------------------------------------------------------
+# multi-region placement (region-spread mirrors + region-local reads)
+# ---------------------------------------------------------------------------
+
+class TestRegionPlacement:
+    @pytest.fixture()
+    def hdfs2(self, tmp_path):
+        # groups 0-4 -> region 0, groups 5-9 -> region 1
+        return HdfsCluster(tmp_path / "h2", num_groups=10, num_regions=2)
+
+    def _write(self, hdfs, rng, placement, path="/f"):
+        data = rng.integers(0, 256, 23 * CHUNK + 321,
+                            dtype=np.uint8).tobytes()
+        write_striped(hdfs, path, data, width=8, chunk=CHUNK,
+                      stripe=STRIPE, placement=placement)
+        return data
+
+    def test_num_regions_validated_and_mapped(self, tmp_path):
+        with pytest.raises(ValueError, match="num_regions"):
+            HdfsCluster(tmp_path / "a", num_groups=4, num_regions=0)
+        with pytest.raises(ValueError, match="num_regions"):
+            HdfsCluster(tmp_path / "b", num_groups=4, num_regions=5)
+        h = HdfsCluster(tmp_path / "c", num_groups=10, num_regions=2)
+        assert h.region_stride() == 5
+        assert [h.group_region(g) for g in range(10)] == \
+            [0] * 5 + [1] * 5
+        # uneven split: the tail folds into the last region
+        h3 = HdfsCluster(tmp_path / "d", num_groups=10, num_regions=3)
+        assert h3.group_region(9) == 2
+        assert max(h3.group_region(g) for g in range(10)) == 2
+
+    def test_region_spread_attrs_roundtrip(self):
+        pl = Placement.replicated(2, region_spread=True)
+        back = Placement.from_attrs(pl.to_attrs())
+        assert back.region_spread is True
+        assert back.replicas == 2
+        # legacy attrs without the key default to False
+        raw = pl.to_attrs()
+        del raw["region_spread"]
+        assert Placement.from_attrs(raw).region_spread is False
+
+    def test_mirrors_land_in_another_region(self, hdfs2, rng):
+        self._write(hdfs2, rng,
+                    Placement.replicated(1, region_spread=True))
+        pl = Placement.from_attrs(hdfs2.attrs("/f")["placement"])
+        meta_files = StripedReader(hdfs2, "/f").meta.files
+        for f, (group, _name) in enumerate(meta_files):
+            for rg, _rn in pl.replica_files[f]:
+                assert hdfs2.group_region(rg) != \
+                    hdfs2.group_region(group), \
+                    f"mirror of stripe {f} stayed in its data region"
+
+    def test_without_spread_mirrors_stay_adjacent(self, hdfs2, rng):
+        self._write(hdfs2, rng, Placement.replicated(1), path="/g")
+        pl = Placement.from_attrs(hdfs2.attrs("/g")["placement"])
+        meta_files = StripedReader(hdfs2, "/g").meta.files
+        for f, (group, _name) in enumerate(meta_files):
+            assert pl.replica_files[f][0][0] == \
+                (group + 1) % hdfs2.num_groups
+
+    def test_prefer_region_serves_region_local_copies(self, hdfs2, rng):
+        """With region-spread mirrors, a region-1 reader serves every
+        stripe from a region-1 copy — even with region 0 entirely lost —
+        and that is NOT a degraded read (locality choice, not failover)."""
+        data = self._write(hdfs2, rng,
+                           Placement.replicated(1, region_spread=True))
+        r0 = StripedReader(hdfs2, "/f")
+        pl = Placement.from_attrs(hdfs2.attrs("/f")["placement"])
+        # region 0 burns down: delete every physical copy living there
+        copies = list(r0.meta.files)
+        for reps in pl.replica_files:
+            copies += [tuple(c) for c in reps]
+        for g, n in copies:
+            if hdfs2.group_region(g) == 0:
+                (hdfs2.root / f"group{g:02d}" / n).unlink()
+        local = StripedReader(hdfs2, "/f", prefer_region=1)
+        assert local.read_all() == data
+        assert local.stats["degraded_reads"] == 0, \
+            "region-local mirror reads must not count as degraded"
+        # a primary-first reader still survives, but THOSE are failovers
+        far = StripedReader(hdfs2, "/f")
+        assert far.read_all() == data
+        assert far.stats["degraded_reads"] > 0

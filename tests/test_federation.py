@@ -1,0 +1,229 @@
+"""Region federation (repro.fabric.federation.RegionReplicator):
+hot blocks converge into under-replicated regions peer-to-peer, at
+DEFERRED priority, in bounded rounds, honoring eviction-withdraw."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.blockstore.image import build_image
+from repro.blockstore.lazy import LazyImageClient
+from repro.blockstore.prefetch import HotBlockService
+from repro.blockstore.registry import Registry
+from repro.blockstore.swarm import Swarm, Topology
+from repro.fabric.federation import RegionReplicator
+
+BS = 16 * 1024
+
+
+@pytest.fixture()
+def fed_env(tmp_path, rng):
+    """One seeded us-region holder of app.bin (6 blocks), a hot-block
+    record covering those blocks, and an empty eu region."""
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "app.bin").write_bytes(
+        rng.integers(0, 256, 6 * BS, dtype=np.uint8).tobytes())
+    reg = Registry(tmp_path / "reg")
+    man = build_image(src, reg, "img", block_size=BS)
+    swarm = Swarm(Topology())
+    seed = LazyImageClient(man, reg, tmp_path / "us0",
+                           node_id="us-node0000", peers=swarm)
+    seed.read_file("app.bin")
+    svc = HotBlockService(tmp_path / "hot")
+    blocks = man.file_map()["app.bin"].blocks
+    svc.record("img", [{"hash": h, "file": "app.bin", "block": i,
+                        "t": i * 0.01} for i, h in enumerate(blocks)])
+    return tmp_path, reg, man, swarm, svc, seed
+
+
+def _eu_client(fed_env, name, **kw):
+    tmp_path, reg, man, swarm, _svc, _seed = fed_env
+    return LazyImageClient(man, reg, tmp_path / name,
+                           node_id=f"eu-{name}", peers=swarm, **kw)
+
+
+class TestPolicy:
+    def test_min_region_replicas_validated(self, fed_env):
+        _tmp, _reg, _man, swarm, svc, _seed = fed_env
+        with pytest.raises(ValueError, match="min_region_replicas"):
+            RegionReplicator(swarm, svc, min_region_replicas=0)
+
+    def test_register_derives_region_and_unregister(self, fed_env):
+        _tmp, _reg, _man, swarm, svc, _seed = fed_env
+        rep = RegionReplicator(swarm, svc)
+        eu = _eu_client(fed_env, "node0001")
+        assert rep.register(eu) == "eu"
+        jp = _eu_client(fed_env, "node0002")
+        rep.register(jp, region="jp")      # explicit override wins
+        assert rep.regions() == ["eu", "jp"]
+        rep.unregister(eu)
+        assert rep.regions() == ["jp"]
+
+    def test_under_replicated_hottest_first_skips_unheld(self, fed_env):
+        """Blocks nobody in the swarm holds are excluded (replication
+        moves replicas closer, never originates registry traffic), and
+        already-satisfied blocks drop out."""
+        _tmp, _reg, man, swarm, svc, _seed = fed_env
+        rep = RegionReplicator(swarm, svc)
+        blocks = man.file_map()["app.bin"].blocks
+        phantom = "ff" * 32
+        scores = {phantom: 99.0, blocks[0]: 2.0, blocks[1]: 1.0}
+        assert rep.under_replicated("eu", scores) == \
+            [blocks[0], blocks[1]]
+        # a region-local copy of blocks[0] satisfies it
+        eu = _eu_client(fed_env, "node0003")
+        eu.ensure_block(blocks[0])
+        assert rep.under_replicated("eu", scores) == [blocks[1]]
+
+
+class TestReplicateOnce:
+    def test_converges_region_peer_to_peer(self, fed_env):
+        tmp_path, reg, man, swarm, svc, seed = fed_env
+        rep = RegionReplicator(swarm, svc)
+        eu = _eu_client(fed_env, "node0010")
+        rep.register(eu)
+        before = reg.stats["block_requests"]
+        moved = rep.replicate_once()
+        blocks = man.file_map()["app.bin"].blocks
+        assert moved == len(set(blocks))
+        # every pull was peer-to-peer over the WAN tier, not registry
+        assert eu.stats["registry_fetches"] == 0
+        assert reg.stats["block_requests"] == before
+        for h in set(blocks):
+            assert swarm.region_holder_count(h, "eu") == 1
+        assert swarm.region_ingress["eu"]["blocks"] == len(set(blocks))
+        # converged: the next round is a no-op
+        assert rep.replicate_once() == 0
+        assert rep.stats["rounds"] == 2
+        assert rep.stats["replicated_bytes"] == len(set(blocks)) * BS
+
+    def test_round_robin_spreads_over_region_clients(self, fed_env):
+        _tmp, _reg, man, swarm, svc, _seed = fed_env
+        rep = RegionReplicator(swarm, svc)
+        eus = [_eu_client(fed_env, f"node002{i}") for i in range(2)]
+        for c in eus:
+            rep.register(c)
+        rep.replicate_once()
+        held = [len(c.cached_hashes()) for c in eus]
+        assert all(n > 0 for n in held), \
+            f"replica set concentrated on one node: {held}"
+        assert sum(held) == len(set(man.file_map()["app.bin"].blocks))
+
+    def test_bounded_rounds_converge_incrementally(self, fed_env):
+        _tmp, _reg, man, swarm, svc, _seed = fed_env
+        rep = RegionReplicator(swarm, svc, max_bytes_per_round=2 * BS)
+        eu = _eu_client(fed_env, "node0030")
+        rep.register(eu)
+        uniq = len(set(man.file_map()["app.bin"].blocks))
+        per_round = [rep.replicate_once() for _ in range(uniq)]
+        assert max(per_round) <= 2          # never a WAN burst
+        assert sum(per_round) == uniq       # ...but fully converges
+        rep2 = RegionReplicator(swarm, svc, max_blocks_per_round=1)
+        jp = LazyImageClient(man, _reg, _tmp / "jp0",
+                             node_id="jp-node0000", peers=swarm)
+        rep2.register(jp)
+        assert rep2.replicate_once() == 1
+
+    def test_deferred_pulls_do_not_pin(self, fed_env):
+        from repro.fabric.cache import NodeCache
+
+        tmp_path, reg, man, swarm, svc, _seed = fed_env
+        cache = NodeCache(tmp_path / "eu_cache",
+                          capacity_bytes=64 * BS)
+        eu = LazyImageClient(man, reg, cache.root,
+                             node_id="eu-node0040", peers=swarm,
+                             cache=cache)
+        rep = RegionReplicator(swarm, svc)
+        rep.register(eu)
+        assert rep.replicate_once() > 0
+        assert not cache.pinned_keys(), \
+            "replication pulls must not pin (DEFERRED discipline)"
+
+    def test_eviction_withdraw_keeps_index_honest(self, fed_env):
+        """A bounded cache rotating replicated blocks out must withdraw
+        them from the index (no stale routing), and the region simply
+        counts as under-replicated again next round."""
+        from repro.fabric.cache import NodeCache
+
+        tmp_path, reg, man, swarm, svc, _seed = fed_env
+        cache = NodeCache(tmp_path / "eu_tiny", capacity_bytes=2 * BS)
+        eu = LazyImageClient(man, reg, cache.root,
+                             node_id="eu-node0050", peers=swarm,
+                             cache=cache)
+        rep = RegionReplicator(swarm, svc)
+        rep.register(eu)
+        rep.replicate_once()
+        assert cache.stats["evictions"] > 0
+        for h in set(man.file_map()["app.bin"].blocks):
+            sh = swarm._shard(h)
+            with sh.lock:
+                listed = eu.client_id in sh.holders.get(h, ())
+            assert listed == eu.has_block(h), \
+                f"index and disk disagree for {h[:8]}"
+        # still under-replicated -> the next round pulls again
+        assert rep.replicate_once() > 0
+
+    def test_vanished_holder_counts_error_not_fatal(self, fed_env):
+        tmp_path, reg, man, swarm, svc, seed = fed_env
+        rep = RegionReplicator(swarm, svc)
+        eu = _eu_client(fed_env, "node0060")
+        rep.register(eu)
+        # the only holder's blocks vanish behind the index AND the
+        # registry dies: the round survives, counting errors
+        for h in seed.cached_hashes():
+            seed.cache.path(h).unlink()
+
+        def dead(h):
+            raise OSError("registry down")
+
+        eu.registry = type("R", (), {"get_block": staticmethod(dead)})()
+        assert rep.replicate_once() == 0
+        assert rep.stats["errors"] > 0
+
+
+class TestBackgroundThread:
+    def test_start_stop_converges(self, fed_env):
+        _tmp, _reg, man, swarm, svc, _seed = fed_env
+        rep = RegionReplicator(swarm, svc, interval_s=0.02)
+        eu = _eu_client(fed_env, "node0070")
+        rep.register(eu)
+        rep.start()
+        rep.start()                        # idempotent
+        deadline = time.time() + 5.0
+        uniq = len(set(man.file_map()["app.bin"].blocks))
+        while time.time() < deadline and \
+                len(eu.cached_hashes()) < uniq:
+            time.sleep(0.01)
+        rep.stop()
+        rep.stop()                         # idempotent
+        assert len(eu.cached_hashes()) == uniq
+        assert rep.stats["rounds"] >= 1
+
+
+class TestRuntimeWiring:
+    def test_region_replicator_needs_swarm(self, tmp_path):
+        from repro.core.bootseer import BootseerRuntime
+        from repro.dfs.hdfs import HdfsCluster
+
+        reg = Registry(tmp_path / "reg")
+        hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=2)
+        rt = BootseerRuntime(registry=reg, hdfs=hdfs,
+                             workdir=tmp_path / "rt", optimize=False)
+        with pytest.raises(ValueError, match="optimize=True"):
+            rt.region_replicator()
+
+    def test_region_replicator_built_from_runtime(self, tmp_path):
+        from repro.core.bootseer import BootseerRuntime
+        from repro.dfs.hdfs import HdfsCluster
+
+        reg = Registry(tmp_path / "reg")
+        hdfs = HdfsCluster(tmp_path / "hdfs", num_groups=2)
+        rt = BootseerRuntime(
+            registry=reg, hdfs=hdfs, workdir=tmp_path / "rt",
+            topology=Topology(region_fn=lambda n: "eu"))
+        rep = rt.region_replicator(min_region_replicas=2)
+        assert rep.swarm is rt.swarm
+        assert rep.min_region_replicas == 2
+        rt.close()

@@ -155,3 +155,77 @@ class TestTrace:
         trace = generate_cluster_trace(200, seed=1)
         w = gpu_time_waste_fraction(trace)
         assert 0.005 < w["startup_fraction"] < 0.15
+
+
+class TestWanFederation:
+    """Multi-region WAN model: per-link asymmetric caps over one shared
+    backbone pool, and the workload's region-tier import accounting."""
+
+    def test_wan_links_validation_and_asymmetry(self):
+        from repro.simcluster.resources import wan_links
+
+        with pytest.raises(ValueError, match="num_regions"):
+            wan_links(0, capacity=10.0, per_link=1.0)
+        with pytest.raises(ValueError, match="asymmetry"):
+            wan_links(2, capacity=10.0, per_link=1.0, asymmetry=0.0)
+        links = wan_links(4, capacity=10.0, per_link=4.0, asymmetry=0.5)
+        assert sorted(links) == [1, 2, 3]
+        assert links[1].per_client == pytest.approx(4.0)
+        assert links[2].per_client == pytest.approx(2.0)
+        assert links[3].per_client == pytest.approx(1.0)
+        # one shared backbone pool: all links draw from the same group
+        assert {l.share_group for l in links.values()} == {"wan"}
+
+    def test_wan_links_share_one_backbone_pool(self):
+        from repro.simcluster.resources import wan_links
+
+        links = wan_links(3, capacity=10.0, per_link=100.0)
+        out = simulate_stage([Transfer("r1", links[1], 100.0),
+                              Transfer("r2", links[2], 100.0)])
+        # both on one 10 B/s pool -> 5 each -> 20 s; separate pools
+        # would finish in 10 s
+        for v in out.values():
+            assert v == pytest.approx(20.0)
+
+    def test_warm_regions_import_hot_set_exactly_once(self):
+        p = ClusterParams(num_regions=3)
+        # 24 nodes = 3 racks of 8: one rack per region
+        res = StartupWorkload(params=p, bootseer=True, seed=2).run(24)
+        hot = p.image_bytes * p.hot_fraction
+        assert res["num_regions"] == 3
+        assert set(res["wan_ingress_bytes"]) == {"region1", "region2"}
+        for v in res["wan_ingress_bytes"].values():
+            assert v == pytest.approx(hot)  # once per region, not per node
+        assert res["cross_region_bytes"] == pytest.approx(2 * hot)
+        # the WAN tier never inflates registry egress: still one seed pull
+        assert res["registry_egress_bytes"] == pytest.approx(hot)
+
+    def test_single_region_keeps_seed_arithmetic(self):
+        """num_regions=1 must be bit-identical to the pre-federation
+        model — no WAN transfers, no ingress accounting."""
+        a = StartupWorkload(bootseer=True, seed=3).run(8)
+        b = StartupWorkload(params=ClusterParams(num_regions=1),
+                            bootseer=True, seed=3).run(8)
+        assert a["job_level"] == b["job_level"]
+        assert b["wan_ingress_bytes"] == {}
+        assert b["cross_region_bytes"] == 0.0
+
+    def test_baseline_ignores_regions(self):
+        res = StartupWorkload(params=ClusterParams(num_regions=4),
+                              bootseer=False, seed=1).run(4)
+        assert res["num_regions"] == 1      # lazy baseline has no swarm
+        assert res["wan_ingress_bytes"] == {}
+
+    def test_more_regions_cost_bounded_wan_latency(self):
+        """Adding regions pays each region's one-time WAN import but the
+        job still completes; far regions (thinner links) never beat the
+        near one."""
+        p2 = ClusterParams(num_regions=2)
+        p4 = ClusterParams(num_regions=4)
+        r1 = StartupWorkload(bootseer=True, seed=5).run(16)
+        r2 = StartupWorkload(params=p2, bootseer=True, seed=5).run(16)
+        r4 = StartupWorkload(params=p4, bootseer=True, seed=5).run(16)
+        assert r1["job_level"] <= r2["job_level"] <= r4["job_level"]
+        # WAN import is a one-time LATENCY adder, not a multiplier: even
+        # 4 regions stay within 2x of the single-region startup
+        assert r4["job_level"] < 2.0 * r1["job_level"]

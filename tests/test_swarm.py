@@ -255,6 +255,30 @@ class TestTopology:
         c3.read_file("app.bin")
         assert swarm.stats[c2.client_id]["blocks_served"] == 6
 
+    def test_region_qualified_racks_never_collide(self):
+        """Satellite regression: ``node0042`` and ``eu-node0042`` share a
+        trailing integer but sit in different regions — the rack name is
+        region-qualified, so they can never fold into one rack (which
+        would make a WAN link look intra-rack and dodge its throttle)."""
+        t = Topology(nodes_per_rack=8)
+        assert t.rack_of("node0042") == "rack5"
+        assert t.rack_of("eu-node0042") == "eu/rack5"
+        assert t.region_of("node0042") == "region0"
+        assert t.region_of("eu-node0042") == "eu"
+        # digitless ids take the hash fallback — region-qualified too
+        assert t.rack_of("gpuhost") != t.rack_of("eu-gpuhost")
+        assert t.rack_of("eu-gpuhost").startswith("eu/")
+
+    def test_region_pins_and_hash_fallback(self):
+        t = Topology(regions={"weird": "mars"})
+        assert t.region_of("weird") == "mars"
+        assert t.rack_of("weird").startswith("mars/")
+        t2 = Topology(hash_regions=4)
+        r = t2.region_of("gpuhost")
+        assert r.startswith("region") and r == t2.region_of("gpuhost")
+        t3 = Topology(region_fn=lambda n: "fnregion")
+        assert t3.region_of("anything") == "fnregion"
+
     def test_rarest_first_orders_by_holder_count(self, image_env,
                                                  tmp_path):
         tmp, reg, man = image_env
@@ -267,6 +291,124 @@ class TestTopology:
         swarm.announce(c0, [b[0], b[1]])
         swarm.announce(c1, [b[0]])
         assert swarm.rarest_first([b[0], b[1], b[2]]) == [b[2], b[1], b[0]]
+
+
+class TestRegionTiers:
+    """Region tier above racks: same-rack > same-region > cross-region
+    selection, WAN singleflight, per-pair WAN throttles feeding the
+    EWMA, and region-aware rarest-first."""
+
+    def test_same_region_preferred_over_cross_region(self, image_env,
+                                                     tmp_path):
+        tmp, reg, man = image_env
+        swarm = Swarm(Topology(nodes_per_rack=1))   # every node own rack
+        us = LazyImageClient(man, reg, tmp_path / "us0",
+                             node_id="us-node0000", peers=swarm)
+        us.read_file("app.bin")            # seed via registry (6 blocks)
+        eu0 = LazyImageClient(man, reg, tmp_path / "eu0",
+                              node_id="eu-node0000", peers=swarm)
+        eu0.read_file("app.bin")           # first WAN crossing
+        assert swarm.link_stats["cross_region"]["blocks"] == 6
+        assert swarm.region_ingress["eu"] == {
+            "blocks": 6, "bytes": 6 * BS}
+        eu1 = LazyImageClient(man, reg, tmp_path / "eu1",
+                              node_id="eu-node0001", peers=swarm)
+        eu1.read_file("app.bin")           # must stay inside eu
+        assert swarm.link_stats["cross_region"]["blocks"] == 6, \
+            "cross-region holder picked while a same-region one was live"
+        assert swarm.link_stats["cross_rack"]["blocks"] == 6
+        assert swarm.stats[eu0.client_id]["blocks_served"] == 6
+        assert swarm.region_ingress["eu"]["blocks"] == 6
+
+    def test_wan_flash_crowd_crosses_once_per_block(self, image_env,
+                                                    tmp_path):
+        """WAN singleflight: a whole region cold-starting at once coalesces
+        to ONE cross-region pull per block — everyone else waits for the
+        puller's publish and then fetches region-locally."""
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        seed = LazyImageClient(man, reg, tmp_path / "usS",
+                               node_id="us-node0000", peers=swarm)
+        seed.read_file("app.bin")
+        n = 8
+        clients = [LazyImageClient(man, reg, tmp_path / f"euf{i}",
+                                   node_id=f"eu-node{i:04d}", peers=swarm)
+                   for i in range(n)]
+        blocks = man.file_map()["app.bin"].blocks
+
+        def warm(c):
+            for h in blocks:
+                c.ensure_block(h)
+
+        with ThreadPoolExecutor(n) as ex:
+            list(ex.map(warm, clients))
+        uniq = len(set(blocks))
+        assert swarm.region_ingress["eu"]["blocks"] == uniq, \
+            "a block crossed the WAN more than once into one region"
+        assert swarm.link_stats["cross_region"]["blocks"] == uniq
+        assert all(c.stats["registry_fetches"] == 0 for c in clients)
+
+    def test_congested_wan_link_sheds_load(self, image_env, tmp_path):
+        """Satellite: the per-serve throttle charge lands INSIDE the
+        EWMA-timed window, so a congested cross-region link reads as slow
+        and the selection sheds load to the uncongested region's holder —
+        not just to a lower byte count."""
+        from repro.dfs.hdfs import ThrottleModel
+
+        tmp, reg, man = image_env
+        # us<->eu rides a saturated WAN pair (~20ms per 16KiB block);
+        # us<->ap has no throttle entry and runs at disk speed
+        swarm = Swarm(Topology(), cross_region={
+            frozenset({"us", "eu"}): ThrottleModel(
+                bandwidth=8e5, throttle_after=1 << 30, timescale=1.0)})
+        holders = []
+        for rn in ("eu", "ap"):
+            # warm swarm-less so the holders don't peer off each other,
+            # then join (cached_hashes announces the warm blocks)
+            c = LazyImageClient(man, reg, tmp_path / f"h_{rn}",
+                                node_id=f"{rn}-node0000")
+            c.read_file("lib.bin")
+            swarm.join(c)
+            holders.append(c)
+        eu_h, ap_h = holders
+        req = LazyImageClient(man, reg, tmp_path / "req_us",
+                              node_id="us-node0000", peers=swarm)
+        req.read_file("lib.bin")           # 11 blocks, all cross-region
+        s_eu = swarm.stats[eu_h.client_id]
+        s_ap = swarm.stats[ap_h.client_id]
+        assert s_eu["blocks_served"] <= 2, \
+            "congested WAN link kept its load despite the throttle charge"
+        assert s_ap["blocks_served"] >= 9
+        if s_eu["blocks_served"]:
+            assert s_eu["serve_latency_ewma_s"] >= 0.015
+        assert swarm.link_stats["cross_region"]["blocks"] == 11
+        assert swarm.region_ingress["us"]["blocks"] == 11
+
+    def test_rarest_first_region_tiebreak(self, image_env, tmp_path):
+        """Among globally-equal-rarity blocks, the requester's region
+        streams its OWN rarest first, so each region builds replicas
+        instead of re-crossing the WAN in lockstep."""
+        tmp, reg, man = image_env
+        swarm = Swarm()
+        us = LazyImageClient(man, reg, tmp_path / "rrus",
+                             node_id="us-node0000", peers=swarm)
+        eu = LazyImageClient(man, reg, tmp_path / "rreu",
+                             node_id="eu-node0000", peers=swarm)
+        b = man.file_map()["lib.bin"].blocks
+        # b0: one holder in EACH region; b1: both holders in us —
+        # global counts tie at 2, but eu holds a copy of b0 already
+        swarm.announce(us, [b[0], b[1]])
+        swarm.announce(eu, [b[0]])
+        us2 = LazyImageClient(man, reg, tmp_path / "rrus2",
+                              node_id="us-node0001", peers=swarm)
+        swarm.announce(us2, [b[1]])
+        assert swarm.rarest_first([b[0], b[1]], requester=eu) == \
+            [b[1], b[0]]
+        # region may also be named directly (the replicator's view)
+        assert swarm.rarest_first([b[0], b[1]], requester="eu") == \
+            [b[1], b[0]]
+        # without a requester the global tie keeps input order
+        assert swarm.rarest_first([b[0], b[1]]) == [b[0], b[1]]
 
 
 class _SlowPeer:

@@ -70,3 +70,100 @@ def test_swarm_reads_equal_registry_direct(block_pow, sizes, dup,
             want = direct.read_file(path)
             for c in clients:
                 assert c.read_file(path) == want
+
+
+REGIONS = ("us", "eu", "ap", "jp")
+
+
+class _Holder:
+    """Minimal swarm member: serves a synthetic payload, optionally
+    withdrawing itself mid-pull (the eviction-listener race)."""
+
+    def __init__(self, node_id, swarm=None, vanish=False):
+        self.node_id = node_id
+        self.client_id = node_id
+        self.swarm = swarm
+        self.vanish = vanish
+        self.serves = 0
+
+    def get_cached_block(self, h):
+        self.serves += 1
+        if self.vanish:
+            # the block left disk during the pull: withdraw eagerly
+            # (NodeCache eviction listener), then miss
+            self.swarm.withdraw(h, self)
+            return None
+        return b"payload-" + h.encode()
+
+
+@settings(**SET)
+@given(holder_regions=st.lists(st.integers(0, 3), min_size=1, max_size=8),
+       req_region=st.integers(0, 3))
+def test_selection_never_crosses_region_past_live_local_holder(
+        holder_regions, req_region):
+    """Federation invariant: for ANY holder layout, a cross-region holder
+    is never picked while a live same-region holder exists — and the
+    cross-region link stats / region ingress move iff the WAN was the
+    only way to the block."""
+    swarm = Swarm()
+    h = "aa" * 32
+    holders = []
+    for i, r in enumerate(holder_regions):
+        c = _Holder(f"{REGIONS[r]}-h{i:03d}")
+        swarm.join(c)
+        swarm.announce(c, [h])
+        holders.append(c)
+    rname = REGIONS[req_region]
+    req = _Holder(f"{rname}-req")
+    swarm.join(req)
+    data = swarm.fetch(h, req)
+    assert data is not None
+    swarm.publish(h, req)              # the caller's contract
+    same = [c for c in holders if c.node_id.startswith(rname + "-")]
+    assert sum(c.serves for c in holders) == 1
+    if same:
+        assert sum(c.serves for c in same) == 1
+        assert swarm.link_stats["cross_region"]["blocks"] == 0
+        assert rname not in swarm.region_ingress
+    else:
+        assert swarm.link_stats["cross_region"]["blocks"] == 1
+        assert swarm.region_ingress[rname]["blocks"] == 1
+
+
+@settings(**SET)
+@given(flags=st.lists(st.booleans(), min_size=1, max_size=6),
+       req_region=st.integers(0, 3))
+def test_withdraw_during_pull_leaves_no_stale_entry(flags, req_region):
+    """Federation invariant: a holder that withdraws (eviction) DURING a
+    cross-region pull never survives in the availability index, and no
+    singleflight / WAN-singleflight marker is left armed afterwards."""
+    swarm = Swarm()
+    h = "bb" * 32
+    holders = []
+    for i, vanish in enumerate(flags):
+        c = _Holder(f"{REGIONS[i % len(REGIONS)]}-h{i:03d}",
+                    swarm=swarm, vanish=vanish)
+        swarm.join(c)
+        swarm.announce(c, [h])
+        holders.append(c)
+    req = _Holder(f"{REGIONS[req_region]}-req")
+    swarm.join(req)
+    data = swarm.fetch(h, req)
+    live = {c.client_id for c in holders if not c.vanish}
+    if live:
+        assert data is not None
+        swarm.publish(h, req)
+    else:
+        # every holder vanished: the requester re-armed as
+        # fetcher-of-record and must go to the registry itself
+        assert data is None
+        swarm.abandon(h, req)
+    sh = swarm._shard(h)
+    with sh.lock:
+        indexed = set(sh.holders.get(h, ()))
+        assert h not in sh.inflight
+        assert not sh.wan_inflight, "leaked WAN-singleflight marker"
+    for c in holders:
+        if c.vanish and c.serves:
+            assert c.client_id not in indexed, \
+                f"withdrawn holder {c.client_id} still indexed"
